@@ -1,0 +1,37 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+OUT = pathlib.Path(__file__).resolve().parent / "out"
+
+APPS = ["backprop", "quicksilver", "lud", "cpd", "pennant", "kmeans",
+        "hotspot", "bfs", "bptree"]
+SCHEDS = ["reactive", "predictive"]
+
+
+def save_json(name: str, payload) -> pathlib.Path:
+    OUT.mkdir(parents=True, exist_ok=True)
+    p = OUT / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+def load_json(name: str):
+    p = OUT / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6

@@ -1,0 +1,61 @@
+"""Fig. 1: performance of Table-I frequencies vs the optimal frequency vs
+Cori, for reactive and predictive page schedulers (paper SIII-A / SV-A).
+
+Output per (app, scheduler): slowdown-vs-optimal for each Table-I system,
+for Cori's chosen frequency, and the data moved (% of footprint)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import APPS, SCHEDS, save_json
+from repro.core import (SimConfig, bin_trace, generate, simulate, study)
+
+
+def run(apps=APPS, quick: bool = False):
+    apps = apps[:4] if quick else apps
+    rows = []
+    for app in apps:
+        trace = generate(app)
+        bins = bin_trace(trace)
+        for sched in SCHEDS:
+            st = study(app, sched)
+            gaps = st.table_i_slowdowns()
+            moved = {}
+            for name in gaps:
+                from repro.core import table_i_periods_for
+                p = table_i_periods_for(bins.num_accesses)[name]
+                r = simulate(bins, p, sched)
+                moved[name] = r.data_moved_pages / bins.num_pages
+            r_cori = simulate(bins, int(st.cori.chosen_period), sched)
+            rows.append({
+                "app": app, "scheduler": sched,
+                "optimal_period": st.optimal_period,
+                "optimal_runtime": st.optimal_runtime,
+                "cori_period": st.cori.chosen_period,
+                "cori_slowdown": st.cori_slowdown_vs_optimal,
+                "cori_data_moved_frac": r_cori.data_moved_pages / bins.num_pages,
+                "table_i_slowdown": gaps,
+                "table_i_data_moved_frac": moved,
+            })
+    worst = max(max(r["table_i_slowdown"].values()) for r in rows)
+    mean_cori = float(np.mean([r["cori_slowdown"] for r in rows]))
+    mean_best_fixed = float(np.mean(
+        [min(r["table_i_slowdown"].values()) for r in rows]))
+    mean_worst_fixed = float(np.mean(
+        [max(r["table_i_slowdown"].values()) for r in rows]))
+    summary = {
+        "rows": rows,
+        "worst_fixed_gap": worst,
+        "mean_cori_slowdown": mean_cori,
+        "mean_best_fixed_slowdown": mean_best_fixed,
+        "mean_worst_fixed_slowdown": mean_worst_fixed,
+    }
+    save_json("fig1", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    s = run()
+    print(f"mean cori slack {s['mean_cori_slowdown']:.2%}; fixed-frequency "
+          f"gap {s['mean_best_fixed_slowdown']:.2%}.."
+          f"{s['mean_worst_fixed_slowdown']:.2%} (worst {s['worst_fixed_gap']:.0%})")

@@ -1,0 +1,58 @@
+"""Fig. 3: page-reuse-distance histograms + runtime slowdown across all
+period durations, with Cori's candidate periods marked (paper SIII-C).
+
+Numbers sufficient to re-render the figure: per app the histogram
+(values, counts), the period->slowdown curve for both schedulers, and the
+Cori candidate ladder."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import (bin_trace, candidate_periods, dominant_reuse,
+                        exhaustive_periods, generate, prune_insignificant,
+                        reuse_distance_histogram, sweep)
+
+FIG3_APPS = ["backprop", "lud", "cpd", "pennant", "kmeans"]
+
+
+def run(apps=FIG3_APPS, quick: bool = False):
+    apps = apps[:2] if quick else apps
+    out = {}
+    for app in apps:
+        tr = generate(app)
+        bins = bin_trace(tr)
+        hist = prune_insignificant(
+            reuse_distance_histogram(tr.pages, bin_width=1000))
+        dr = dominant_reuse(hist)
+        cands = candidate_periods(dr, float(bins.num_accesses),
+                                  min_period=float(bins.block))
+        periods = exhaustive_periods(bins, 64)
+        curves = {}
+        for sched in ("reactive", "predictive"):
+            res = sweep(bins, periods, sched)
+            inf = bins.num_accesses * 1.0
+            curves[sched] = {
+                "periods": [int(p) for p in res],
+                "slowdown_vs_infinite_dram":
+                    [res[p].runtime / inf for p in res],
+            }
+            best = min(res.values(), key=lambda r: r.runtime)
+            curves[sched]["best_period"] = best.period_requests
+        out[app] = {
+            "histogram": {"values": hist.values.tolist(),
+                          "counts": hist.counts.tolist()},
+            "dominant_reuse": dr,
+            "cori_candidates": cands.tolist()[:16],
+            "curves": curves,
+        }
+    save_json("fig3", out)
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    for app, d in o.items():
+        print(f"{app:11s} DR={d['dominant_reuse']:9.0f} "
+              f"best_r={d['curves']['reactive']['best_period']:8d} "
+              f"best_p={d['curves']['predictive']['best_period']:8d}")

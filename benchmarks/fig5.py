@@ -1,0 +1,62 @@
+"""Fig. 5: tuning-overhead comparison -- Cori vs base-left/right/random
+(paper SV-B).
+
+(a) trials-to-best per (app, scheduler) for each method;
+(b) slowdown the baselines reach when given only Cori's trial budget;
+(c) Cori's final period selections."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import APPS, SCHEDS, save_json
+from repro.core import (baseline_trials_all, base_candidates, bin_trace,
+                        generate, run_cori, simulate, study, trials_to_best)
+
+
+def run(apps=APPS, quick: bool = False):
+    apps = apps[:4] if quick else apps
+    rows = []
+    for app in apps:
+        trace = generate(app)
+        bins = bin_trace(trace)
+        for sched in SCHEDS:
+            st = study(app, sched)
+            base = baseline_trials_all(bins, sched, seeds=3)
+            # (b): best runtime baselines find within Cori's budget
+            budget = max(1, st.cori_trials_to_best)
+            timestep = max(bins.block, bins.num_accesses // 128)
+            cands = base_candidates(bins.num_accesses, timestep)
+            rts = np.array([simulate(bins, int(p), sched).runtime
+                            for p in cands])
+            within = {
+                "base-right": float(rts[:budget].min()),
+                "base-left": float(rts[::-1][:budget].min()),
+            }
+            rng_best = []
+            for s in range(3):
+                perm = np.random.default_rng(s).permutation(len(rts))
+                rng_best.append(float(rts[perm][:budget].min()))
+            within["base-random"] = float(np.mean(rng_best))
+            rows.append({
+                "app": app, "scheduler": sched,
+                "cori_trials": st.cori_trials_to_best,
+                "baseline_trials": base,
+                "cori_period": st.cori.chosen_period,
+                "cori_slowdown": st.cori_slowdown_vs_optimal,
+                "baseline_slowdown_at_cori_budget": {
+                    k: v / st.optimal_runtime - 1.0 for k, v in within.items()},
+            })
+    cori_mean = float(np.mean([r["cori_trials"] for r in rows]))
+    base_mean = float(np.mean([v for r in rows
+                               for v in r["baseline_trials"].values()]))
+    summary = {"rows": rows, "cori_mean_trials": cori_mean,
+               "baseline_mean_trials": base_mean,
+               "trial_reduction": base_mean / max(cori_mean, 1e-9)}
+    save_json("fig5", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    s = run()
+    print(f"cori {s['cori_mean_trials']:.1f} trials vs baselines "
+          f"{s['baseline_mean_trials']:.1f} -> {s['trial_reduction']:.1f}x")

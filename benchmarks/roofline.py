@@ -1,0 +1,99 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the dry-run's compiled artifacts, single-pod mesh.
+
+    compute   = HLO_FLOPs_per_chip   / 197e12   (bf16 peak, TPU v5e)
+    memory    = HLO_bytes_per_chip   / 819e9    (HBM bandwidth)
+    collective= coll_bytes_per_chip  / 50e9     (ICI per-link)
+
+FLOPs / bytes / collective bytes come from the *cost variant* lowering
+(layer and grad-accum loops unrolled -- XLA's cost analysis counts while
+bodies once, so the scanned deploy variant undercounts; see dryrun.py).
+Cost analysis is per-partition for SPMD executables, hence "per chip".
+
+MODEL_FLOPS = 6*N*D (train; N=active params for MoE) or 2*N*D (fwd-only),
+per chip.  The ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent / "out" / "dryrun"
+
+
+def _model_flops_per_chip(rec: dict) -> float:
+    n = rec["active_params"]
+    d = rec["tokens_per_step"]
+    mult = 6.0 if rec["step_kind"] == "train" else 2.0
+    return mult * n * d / rec["devices"]
+
+
+def analyze(records: Optional[List[dict]] = None) -> List[dict]:
+    if records is None:
+        records = []
+        for p in sorted(DRYRUN_DIR.glob("*__single.json")):
+            records.append(json.loads(p.read_text()))
+    rows = []
+    for r in records:
+        cv = r.get("cost_variant") or {k: r[k] for k in
+                                       ("flops", "bytes_accessed",
+                                        "collective_bytes_total")}
+        flops = cv["flops"]
+        byts = cv["bytes_accessed"]
+        coll = cv["collective_bytes_total"]
+        t_c = flops / PEAK_FLOPS
+        t_m = byts / HBM_BW
+        t_n = coll / ICI_BW
+        bound = max(t_c, t_m, t_n)
+        dom = {t_c: "compute", t_m: "memory", t_n: "collective"}[bound]
+        mf = _model_flops_per_chip(r)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r["step_kind"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dom,
+            "bound_s": bound,
+            "model_flops_per_chip": mf,
+            "hlo_flops_per_chip": flops,
+            "useful_flop_ratio": mf / max(flops, 1.0),
+            "roofline_fraction": (mf / PEAK_FLOPS) / max(bound, 1e-30),
+            "hbm_gb_per_chip": (r["argument_bytes"] + r["temp_bytes"]) / 1e9,
+            "fits_hbm_16g": (r["argument_bytes"] + r["temp_bytes"]) < 16e9,
+        })
+    return rows
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | step | compute s | memory s | collective s | "
+           "dominant | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['step']} | {r['compute_s']:.3e} "
+        f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} "
+        f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.3f} |\n"
+        for r in rows)
+    return hdr + body
+
+
+def run(quick: bool = False):
+    rows = analyze()
+    if not rows:
+        return {"rows": [], "note": "no dry-run records yet"}
+    save_json("roofline", {"rows": rows})
+    (pathlib.Path(__file__).resolve().parent / "out"
+     / "roofline.md").write_text(markdown_table(rows))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    rr = run()
+    print(markdown_table(rr["rows"]))

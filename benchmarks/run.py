@@ -1,0 +1,71 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the figure's headline
+number).  Results are also written as JSON under ``benchmarks/out/`` for
+EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import Timer
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of apps/steps (CI-speed)")
+    args = ap.parse_args(argv)
+    q = args.quick
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import fig1
+    with Timer() as t:
+        s1 = fig1.run(quick=q)
+    print(f"fig1_perf_gap,{t.us:.0f},"
+          f"cori_slack={s1['mean_cori_slowdown']:.4f};"
+          f"worst_fixed_gap={s1['worst_fixed_gap']:.3f}")
+
+    from benchmarks import fig3
+    with Timer() as t:
+        s3 = fig3.run(quick=q)
+    drs = ";".join(f"{a}:{d['dominant_reuse']:.0f}" for a, d in s3.items())
+    print(f"fig3_reuse_histograms,{t.us:.0f},{drs}")
+
+    from benchmarks import fig5
+    with Timer() as t:
+        s5 = fig5.run(quick=q)
+    print(f"fig5_tuning_trials,{t.us:.0f},"
+          f"trial_reduction={s5['trial_reduction']:.2f}x;"
+          f"cori={s5['cori_mean_trials']:.1f};"
+          f"base={s5['baseline_mean_trials']:.1f}")
+
+    from benchmarks import fig6
+    with Timer() as t:
+        s6 = fig6.run(quick=q)
+    ok = all(d["sub_dr_moves_more_data"] for d in s6.values())
+    print(f"fig6_system_validation,{t.us:.0f},sub_dr_moves_more_data={ok}")
+
+    from benchmarks import tiering
+    with Timer() as t:
+        st = tiering.run(quick=q)
+    worst = max(v["cori_vs_best_fixed"] for v in st.values())
+    print(f"tiering_serving_cori,{t.us:.0f},max_vs_best_fixed={worst:.2f}x")
+
+    from benchmarks import roofline
+    with Timer() as t:
+        rr = roofline.run(quick=q)
+    n = len(rr["rows"])
+    if n:
+        best = max(r["roofline_fraction"] for r in rr["rows"])
+        print(f"roofline_terms,{t.us:.0f},cells={n};best_fraction={best:.3f}")
+    else:
+        print(f"roofline_terms,{t.us:.0f},cells=0 (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

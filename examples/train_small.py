@@ -1,0 +1,38 @@
+"""End-to-end training driver on a small dense model.
+
+Uses the full production stack -- deterministic data pipeline, AdamW,
+checkpoint/restart, straggler monitor -- via ``repro.launch.train``.  The
+model is a reduced qwen3-family config; on a real TPU slice the same
+driver trains the full configs (see repro/launch/dryrun.py for the
+production mesh lowering).  A few hundred steps overfit the motif stream,
+demonstrating real learning:
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+
+from repro.launch import train as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args(argv)
+    report = T.main([
+        "--arch", "qwen3-14b", "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64",
+        "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--log-every", "25",
+    ])
+    drop = report["first_loss"] - report["final_loss"]
+    print(f"\nloss {report['first_loss']:.3f} -> {report['final_loss']:.3f} "
+          f"({drop:+.3f}); checkpoints in {args.ckpt_dir}")
+    assert drop > 0.5, "model failed to learn the motif stream"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Cori: Frequency Generator + Tuner (paper §IV-B, §IV-C).
+
+Dominant reuse (Eq. 1), with reuses sorted ascending so that the extra
+``(N - i)`` weight favours shorter reuse distances:
+
+            sum_i (N - i) * repeat_i * reuse_i
+    DR  =  ------------------------------------        i = 1..N
+            sum_i (N - i) * repeat_i
+
+Candidate periods (Eq. 2):  [DR, 2*DR, 3*DR, ..., Runtime/2], emitted
+shortest period first (highest frequency first) -- this priority ordering is
+essential to Cori's trial efficiency (§IV-B).
+
+The Tuner (§IV-C) trials candidates in order against the actual system (here:
+the hybrid-memory simulator, or any callable ``period -> runtime``) and stops
+either when a trial budget is hit or when performance stops improving
+("performance ... shows no significant variation from the last trial",
+§IV-D).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.reuse import ReuseHistogram
+
+__all__ = [
+    "dominant_reuse",
+    "candidate_periods",
+    "TuneResult",
+    "Tuner",
+    "trials_to_best",
+]
+
+
+def dominant_reuse(hist: ReuseHistogram) -> float:
+    """Eq. 1: weighted average of reuses, biased towards short ones."""
+    if hist.num_bins == 0:
+        raise ValueError("empty reuse histogram: nothing to tune from")
+    order = np.argsort(hist.values)
+    reuse = hist.values[order].astype(np.float64)
+    repeat = hist.counts[order].astype(np.float64)
+    n = reuse.shape[0]
+    if n == 1:
+        return float(reuse[0])
+    w = (n - np.arange(1, n + 1, dtype=np.float64)) * repeat  # (N - i) * repeat_i
+    denom = w.sum()
+    if denom <= 0:  # degenerate: all weight on the longest reuse
+        return float(reuse[0])
+    return float((w * reuse).sum() / denom)
+
+
+def candidate_periods(dr: float, runtime: float, max_candidates: int = 64,
+                      min_period: float = 1.0) -> np.ndarray:
+    """Eq. 2: multiples of DR up to Runtime/2, shortest first.
+
+    `runtime` and the returned periods are in whatever domain DR is measured
+    in (requests for the simulator, seconds / decode-steps on a system).
+    """
+    dr = max(float(dr), float(min_period))
+    hi = runtime / 2.0
+    if dr > hi:
+        return np.array([hi], dtype=np.float64)
+    n = int(hi // dr)
+    ks = np.arange(1, n + 1, dtype=np.float64)
+    if n > max_candidates:
+        # Keep the ladder's head exact (the critical low-multiples region),
+        # thin the tail geometrically -- same endpoints as Eq. 2.
+        head = ks[: max_candidates // 2]
+        tail = np.unique(np.geomspace(head[-1] + 1, n,
+                                      max_candidates - head.shape[0]).round())
+        ks = np.concatenate([head, tail])
+    return ks * dr
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    chosen_period: float
+    chosen_runtime: float
+    trials: int                      # trials actually executed
+    tried_periods: np.ndarray
+    tried_runtimes: np.ndarray
+    candidates: np.ndarray           # full candidate ladder
+
+    @property
+    def best_runtime_tried(self) -> float:
+        return float(np.min(self.tried_runtimes))
+
+
+class Tuner:
+    """Cori's Tuner: trial candidates in order, stop on no-improvement.
+
+    Args:
+      evaluate: callable(period) -> runtime (lower is better).  For the
+        simulator this wraps `core.sim.simulate`; for the serving runtime it
+        wraps a measured window of decode steps.
+      patience: stop after this many consecutive non-improving trials
+        (the flexible stopping policy of §IV-D).
+      rel_tol: a trial must beat the best-so-far by this fraction to count
+        as an improvement.
+      max_trials: hard trial budget (None = whole ladder).
+    """
+
+    def __init__(self, evaluate: Callable[[float], float], patience: int = 2,
+                 rel_tol: float = 0.01, max_trials: Optional[int] = None):
+        self.evaluate = evaluate
+        self.patience = patience
+        self.rel_tol = rel_tol
+        self.max_trials = max_trials
+
+    def run(self, candidates: Sequence[float]) -> TuneResult:
+        candidates = np.asarray(list(candidates), dtype=np.float64)
+        best_rt = np.inf
+        best_p = float(candidates[0])
+        tried_p: List[float] = []
+        tried_rt: List[float] = []
+        stale = 0
+        for p in candidates:
+            rt = float(self.evaluate(float(p)))
+            tried_p.append(float(p))
+            tried_rt.append(rt)
+            if rt < best_rt * (1.0 - self.rel_tol):
+                best_rt, best_p, stale = rt, float(p), 0
+            else:
+                stale += 1
+                if stale >= self.patience:
+                    break
+            if self.max_trials is not None and len(tried_p) >= self.max_trials:
+                break
+        if not np.isfinite(best_rt):
+            best_rt, best_p = tried_rt[0], tried_p[0]
+        return TuneResult(best_p, best_rt, len(tried_p),
+                          np.asarray(tried_p), np.asarray(tried_rt), candidates)
+
+
+def trials_to_best(runtimes_in_order: Sequence[float], tol: float = 0.005
+                   ) -> int:
+    """Number of trials until a candidate within `tol` of the sequence's own
+    best has been tried (the Fig. 5a metric)."""
+    rts = np.asarray(list(runtimes_in_order), dtype=np.float64)
+    if rts.size == 0:
+        return 0
+    target = rts.min() * (1.0 + tol)
+    return int(np.argmax(rts <= target)) + 1

@@ -1,0 +1,301 @@
+"""Trace-driven hybrid-memory simulator (paper §II-B), JAX implementation.
+
+Models a flat DRAM+PMEM system in the *request domain*: a period is a fixed
+number of memory requests (paper: "we assume that a period is the time
+duration when a fixed number of memory requests are issued").  Runtime is the
+aggregate access latency under the current placement, plus bandwidth-pressure
+delays, plus constant per-migration and per-period scheduler overheads
+(values in the spirit of [22], [30]).
+
+Defaults follow the paper exactly where stated:
+  * fast:slow latency ratio 1:3, bandwidth ratio 1:0.37  (§II-B, from [19])
+  * fast capacity = 20% of the application footprint      (Figs. 1/3/5/6)
+  * interleaved initial placement                         (§II-B)
+  * per-period swap of hot pages in / LRU pages out, capped by the fast
+    capacity (swaps are (hot, LRU) pairs)                 (§II-B)
+
+Two page schedulers (paper §II-B):
+  * reactive   -- EMA ("exponential moving average ... of the page's accessed
+                 history") over past periods ranks pages.
+  * predictive -- oracular knowledge of the upcoming period's counts ([11],
+                 [30] oracular baseline).
+
+Implementation strategy: the trace is pre-binned once into fixed-size blocks
+(`TraceBins`), so one compiled `lax.scan` serves every candidate period
+length (periods are whole numbers of blocks, padded to a power of two).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.traces import Trace
+
+__all__ = [
+    "SimConfig",
+    "TraceBins",
+    "SimResult",
+    "bin_trace",
+    "simulate",
+    "sweep",
+    "simulate_reference",
+    "SCHEDULERS",
+]
+
+SCHEDULERS = ("reactive", "predictive")
+
+# Default monitoring block: 100 requests == the finest period in Table I
+# (Kleio).  All candidate periods are multiples of this block.
+DEFAULT_BLOCK = 100
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Hybrid memory + page scheduler cost model.
+
+    Time unit == one fast-memory access.
+    """
+
+    fast_frac: float = 0.20        # DRAM share of footprint (20%:80% paper split)
+    lat_fast: float = 1.0
+    lat_slow: float = 3.0          # 1:3 latency ratio (paper §II-B)
+    bw_slow: float = 0.37          # slow tier serves 0.37 req/unit vs 1.0 fast
+    bw_penalty: float = 3.0        # extra units per over-bandwidth slow request
+    # Scheduler overheads ([22],[30]): one unit == one fast access (~100 ns
+    # LLC miss).  A move_pages() swap is us-scale -> ~20 units; every period
+    # the scheduler scans the whole footprint's PTE accessed bits -> cost
+    # proportional to the footprint, plus a fixed wakeup.
+    mig_cost: float = 20.0         # constant delay per page migration
+    period_cost: float = 10.0      # fixed delay per period (wakeup)
+    scan_cost_per_page: float = 0.25  # PTE-scan cost x footprint, per period
+    ema_alpha: float = 0.5         # smoothing factor for the accessed-history EMA
+
+    def fast_capacity(self, num_pages: int) -> int:
+        return max(1, int(round(num_pages * self.fast_frac)))
+
+    def period_overhead(self, num_pages: int) -> float:
+        return self.period_cost + self.scan_cost_per_page * num_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceBins:
+    """Per-block page-access histogram of a trace (computed once per trace,
+    shared by every candidate period / scheduler)."""
+
+    name: str
+    block_hist: np.ndarray  # float32[num_blocks, num_pages]
+    block: int              # requests per block
+    num_accesses: int
+    num_pages: int
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.block_hist.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    runtime: float           # simulated time units
+    data_moved_pages: float  # pages migrated (both directions of each swap)
+    migrations: float        # swap count
+    fast_hits: float         # requests serviced from fast memory
+    num_accesses: int
+    period_requests: int
+    scheduler: str
+
+    @property
+    def slowdown_vs_infinite_dram(self) -> float:
+        return self.runtime / (self.num_accesses * 1.0)
+
+    @property
+    def fast_hitrate(self) -> float:
+        return self.fast_hits / max(1, self.num_accesses)
+
+
+def bin_trace(trace: Trace, block: int = DEFAULT_BLOCK) -> TraceBins:
+    """Bin a trace into [num_blocks, num_pages] access counts."""
+    pages = np.asarray(trace.pages, dtype=np.int64)
+    n = pages.shape[0]
+    num_blocks = (n + block - 1) // block
+    blk = np.arange(n, dtype=np.int64) // block
+    flat = blk * trace.num_pages + pages
+    hist = np.bincount(flat, minlength=num_blocks * trace.num_pages)
+    hist = hist.reshape(num_blocks, trace.num_pages).astype(np.float32)
+    return TraceBins(trace.name, hist, block, n, trace.num_pages)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
+def _aggregate_periods(bins: TraceBins, k_blocks: int) -> Tuple[np.ndarray, int]:
+    """Sum consecutive k blocks into periods; pad period count to pow2."""
+    nb, npg = bins.block_hist.shape
+    num_periods = (nb + k_blocks - 1) // k_blocks
+    pad_blocks = num_periods * k_blocks - nb
+    h = bins.block_hist
+    if pad_blocks:
+        h = np.concatenate([h, np.zeros((pad_blocks, npg), np.float32)], axis=0)
+    ph = h.reshape(num_periods, k_blocks, npg).sum(axis=1)
+    p2 = _next_pow2(num_periods)
+    if p2 > num_periods:
+        ph = np.concatenate([ph, np.zeros((p2 - num_periods, npg), np.float32)],
+                            axis=0)
+    return ph, num_periods
+
+
+def _interleaved_init(num_pages: int, capacity: int) -> np.ndarray:
+    """Initial interleaved placement: every (num_pages/capacity)-th page fast."""
+    idx = (np.arange(capacity, dtype=np.int64) * num_pages) // capacity
+    init = np.zeros(num_pages, dtype=bool)
+    init[idx] = True
+    return init
+
+
+@functools.partial(
+    jax.jit, static_argnames=("predictive", "capacity"))
+def _sim_scan(period_hist, num_real, init_fast, *, predictive: bool,
+              capacity: int, lat_fast, lat_slow, bw_slow, bw_penalty,
+              mig_cost, period_overhead, ema_alpha):
+    """Scan over periods.  Carry = placement / hotness / recency / totals."""
+    num_pages = period_hist.shape[1]
+
+    def step(carry, inp):
+        in_fast, hotness, last_access, i = carry
+        counts = inp
+        valid = i < num_real
+
+        # --- scheduler decision at period start -------------------------
+        rank = counts if predictive else hotness
+        # Lexicographic tiebreak: primary hotness, then recency (LRU evict),
+        # then residency (avoid gratuitous swaps).  Recency term in [0,1).
+        recency = (last_access + 1.0) / (i + 2.0)
+        score = rank * 1e6 + recency + 0.5 * in_fast.astype(jnp.float32)
+        _, top_idx = jax.lax.top_k(score, capacity)
+        new_fast = jnp.zeros((num_pages,), jnp.bool_).at[top_idx].set(True)
+        new_fast = jnp.where(valid, new_fast, in_fast)
+
+        swaps = jnp.sum(jnp.logical_and(new_fast, ~in_fast).astype(jnp.float32))
+
+        # --- service this period's accesses -----------------------------
+        lat = jnp.where(new_fast, lat_fast, lat_slow)
+        total = jnp.sum(counts)
+        n_fast = jnp.sum(counts * new_fast.astype(jnp.float32))
+        n_slow = total - n_fast
+        latency = n_fast * lat_fast + n_slow * lat_slow
+        bw_extra = jnp.maximum(0.0, n_slow - bw_slow * total) * bw_penalty
+        period_rt = latency + bw_extra + swaps * mig_cost + period_overhead
+        period_rt = jnp.where(valid, period_rt, 0.0)
+        swaps = jnp.where(valid, swaps, 0.0)
+        n_fast = jnp.where(valid, n_fast, 0.0)
+
+        # --- post-period state updates ----------------------------------
+        hotness = jnp.where(valid, ema_alpha * counts + (1 - ema_alpha) * hotness,
+                            hotness)
+        last_access = jnp.where(jnp.logical_and(valid, counts > 0),
+                                jnp.float32(i), last_access)
+        carry = (new_fast, hotness, last_access, i + 1)
+        return carry, (period_rt, swaps, n_fast)
+
+    init = (
+        init_fast,
+        jnp.zeros((num_pages,), jnp.float32),
+        jnp.full((num_pages,), -1.0, jnp.float32),
+        jnp.int32(0),
+    )
+    _, (rts, swaps, fast_hits) = jax.lax.scan(step, init, period_hist)
+    return jnp.sum(rts), jnp.sum(swaps), jnp.sum(fast_hits)
+
+
+def simulate(bins: TraceBins, period_requests: int, scheduler: str = "reactive",
+             cfg: SimConfig = SimConfig()) -> SimResult:
+    """Simulate one (trace, period, scheduler) combination."""
+    if scheduler not in SCHEDULERS:
+        raise ValueError(f"scheduler must be one of {SCHEDULERS}")
+    k = max(1, int(round(period_requests / bins.block)))
+    period_hist, num_periods = _aggregate_periods(bins, k)
+    capacity = cfg.fast_capacity(bins.num_pages)
+    init_fast = jnp.asarray(_interleaved_init(bins.num_pages, capacity))
+    rt, swaps, fast_hits = _sim_scan(
+        jnp.asarray(period_hist), jnp.int32(num_periods), init_fast,
+        predictive=(scheduler == "predictive"), capacity=capacity,
+        lat_fast=cfg.lat_fast, lat_slow=cfg.lat_slow, bw_slow=cfg.bw_slow,
+        bw_penalty=cfg.bw_penalty, mig_cost=cfg.mig_cost,
+        period_overhead=cfg.period_overhead(bins.num_pages),
+        ema_alpha=cfg.ema_alpha)
+    return SimResult(
+        runtime=float(rt), data_moved_pages=float(swaps) * 2.0,
+        migrations=float(swaps), fast_hits=float(fast_hits),
+        num_accesses=bins.num_accesses, period_requests=k * bins.block,
+        scheduler=scheduler)
+
+
+def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
+          cfg: SimConfig = SimConfig()) -> Dict[int, SimResult]:
+    """Simulate a set of candidate periods (requests)."""
+    out: Dict[int, SimResult] = {}
+    for p in periods:
+        r = simulate(bins, int(p), scheduler, cfg)
+        out[r.period_requests] = r
+    return out
+
+
+def exhaustive_periods(bins: TraceBins, max_candidates: int = 128) -> np.ndarray:
+    """The O(N) candidate space at block granularity: every period in
+    [block, N/2], geometrically subsampled to `max_candidates` values."""
+    lo, hi = bins.block, max(bins.block, bins.num_accesses // 2)
+    ks = np.unique(np.round(np.geomspace(lo, hi, max_candidates)
+                            / bins.block).astype(np.int64))
+    # Same snapping as `simulate` (round-to-block), endpoint included.
+    ks = np.unique(np.concatenate(
+        [ks[ks >= 1], [max(1, int(round(hi / bins.block)))]]))
+    return ks * bins.block
+
+
+# ----------------------------------------------------------------------------
+# Pure-python reference (oracle for tests; mirrors _sim_scan step for step).
+# ----------------------------------------------------------------------------
+
+def simulate_reference(bins: TraceBins, period_requests: int,
+                       scheduler: str = "reactive",
+                       cfg: SimConfig = SimConfig()) -> SimResult:
+    k = max(1, int(round(period_requests / bins.block)))
+    period_hist, num_periods = _aggregate_periods(bins, k)
+    num_pages = bins.num_pages
+    capacity = cfg.fast_capacity(num_pages)
+    in_fast = _interleaved_init(num_pages, capacity)
+    hotness = np.zeros(num_pages, np.float64)
+    last_access = np.full(num_pages, -1.0)
+    runtime = swaps_total = fast_hits = 0.0
+    for i in range(num_periods):
+        counts = period_hist[i].astype(np.float64)
+        rank = counts if scheduler == "predictive" else hotness
+        recency = (last_access + 1.0) / (i + 2.0)
+        # float32 scoring to match the jitted scan bit-for-bit on ties.
+        score = (np.float32(1e6) * rank.astype(np.float32)
+                 + recency.astype(np.float32)
+                 + np.float32(0.5) * in_fast.astype(np.float32))
+        top = np.argsort(-score, kind="stable")[:capacity]
+        new_fast = np.zeros(num_pages, bool)
+        new_fast[top] = True
+        swaps = float(np.sum(new_fast & ~in_fast))
+        total = counts.sum()
+        n_fast = float(counts[new_fast].sum())
+        n_slow = total - n_fast
+        runtime += (n_fast * cfg.lat_fast + n_slow * cfg.lat_slow
+                    + max(0.0, n_slow - cfg.bw_slow * total) * cfg.bw_penalty
+                    + swaps * cfg.mig_cost + cfg.period_overhead(num_pages))
+        swaps_total += swaps
+        fast_hits += n_fast
+        hotness = cfg.ema_alpha * counts + (1 - cfg.ema_alpha) * hotness
+        last_access = np.where(counts > 0, float(i), last_access)
+        in_fast = new_fast
+    return SimResult(runtime=runtime, data_moved_pages=swaps_total * 2,
+                     migrations=swaps_total, fast_hits=fast_hits,
+                     num_accesses=bins.num_accesses,
+                     period_requests=k * bins.block, scheduler=scheduler)

@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules and their resolution to mesh axes.
+
+Parallelism encoded here:
+  * DP    -- activation "batch" over ("pod", "data")
+  * FSDP  -- param "embed" dim over "data" (ZeRO-3-style weight sharding;
+             params stay *within-pod* sharded and pod-replicated, so the
+             per-layer all-gathers ride ICI while only the once-per-step
+             gradient all-reduce crosses the DCN pod axis)
+  * TP    -- param "mlp"/"heads"/"vocab" (and fallbacks) over "model"
+  * EP    -- param "expert" over "model" (expert-parallel MoE)
+  * SP/CP -- decode KV cache "kv_seq" over "model" (context parallelism)
+
+Resolution is divisibility-aware with per-dim fallback: each logical name
+maps to a list of candidate mesh axes; a dim takes the first candidate
+whose size divides it and which is not already used by another dim of the
+same tensor.  E.g. Qwen3's 40 heads don't divide a 16-way model axis, so
+the attention projections shard their 128-wide head_dim instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# candidate mesh axes per logical axis name, in priority order
+PARAM_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "lru": ("model",),
+    "q_lora": (),
+    "kv_lora": (),
+    "layers": (),
+    "cond": (),
+    "qblocks": ("data",),
+}
+
+ACT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    # Sequence parallelism: the residual stream (and thus every remat-saved
+    # layer input) shards its seq dim over "model"; XLA inserts the
+    # all-gather before attention / reduce-scatter after -- SP semantics.
+    # Cut nemotron train_4k temp from 69 GB to HBM scale (EXPERIMENTS SPerf).
+    "seq": ("model",),
+    "embed": (),
+    "vocab": ("model",),
+    "kv_seq": ("model",),
+    "heads": ("model",),
+    "layers": (),
+}
+
+
+def _resolve(axes: Optional[Sequence[Optional[str]]], shape: Tuple[int, ...],
+             rules: Dict[str, Tuple[str, ...]], mesh: Mesh) -> P:
+    """Resolve a logical-axis tuple to a PartitionSpec for `shape`."""
+    if axes is None:
+        return P()
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        if name is None:
+            out.append(None)
+            continue
+        cands = rules.get(name, ())
+        if name == "batch":
+            # batch may take several axes jointly (pod x data)
+            take = [a for a in cands
+                    if a in mesh.axis_names and a not in used]
+            sz = int(np.prod([mesh.shape[a] for a in take])) if take else 1
+            if take and dim % sz == 0:
+                used.update(take)
+                out.append(tuple(take) if len(take) > 1 else take[0])
+            else:
+                # try the largest single axis that divides
+                picked = None
+                for a in take:
+                    if dim % mesh.shape[a] == 0:
+                        picked = a
+                        break
+                if picked:
+                    used.add(picked)
+                out.append(picked)
+            continue
+        picked = None
+        for a in cands:
+            if a in mesh.axis_names and a not in used and dim % mesh.shape[a] == 0:
+                picked = a
+                break
+        if picked:
+            used.add(picked)
+        out.append(picked)
+    return P(*out)
+
+
+def param_spec(axes, shape, mesh: Mesh) -> P:
+    return _resolve(axes, shape, PARAM_RULES, mesh)
+
+
+def act_spec(axes, shape, mesh: Mesh) -> P:
+    return _resolve(axes, shape, ACT_RULES, mesh)
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh,
+                   rules: Dict[str, Tuple[str, ...]] = PARAM_RULES):
+    """NamedSharding tree from a logical-spec tree + ShapeDtypeStruct tree."""
+    is_axes = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x))
+
+    def one(axes, shaped):
+        return NamedSharding(mesh, _resolve(axes, shaped.shape, rules, mesh))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=is_axes)
+
+
+def make_param_shard_fn(mesh: Optional[Mesh]):
+    """Constraint fn for (sliced) layer params inside scan bodies: keeps
+    the FSDP all-gather per-layer (defeats XLA's slice-of-gather hoist that
+    would materialise every layer's gathered weights at once)."""
+    if mesh is None:
+        return None
+
+    def shard(x, axes):
+        spec = _resolve(axes, x.shape, PARAM_RULES, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def act_rules_for(step_kind: str) -> Dict[str, Tuple[str, ...]]:
+    """SP (seq over model) stays on for every sequence-mode step: measured
+    on stablelm prefill_32k, SP cuts collectives 142 GB -> 103 GB (AG+RS
+    replaces the 2x-volume TP all-reduce -- the Megatron-SP identity) *and*
+    temp 8.3 -> 3.6 GB.  The iteration that scoped SP to train only was
+    REFUTED by measurement (EXPERIMENTS.md SPerf it.4)."""
+    return ACT_RULES
+
+
+def make_shard_fn(mesh: Optional[Mesh], exclude: Tuple[str, ...] = (),
+                  rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Activation-constraint fn: shard(x, logical_names) -> x.
+    `exclude` drops mesh axes from the rules (e.g. axes that are Manual
+    inside an enclosing shard_map and so must not appear in constraints)."""
+    if mesh is None:
+        return lambda x, names: x
+    rules = dict(rules if rules is not None else ACT_RULES)
+    rules = {k: tuple(a for a in v if a not in exclude)
+             for k, v in rules.items()}
+
+    def shard(x, names):
+        spec = _resolve(names, x.shape, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def input_sharding(mesh: Mesh, *axes_names) -> NamedSharding:
+    """Sharding for a step input given logical names (divisibility left to
+    the caller -- used for token/target arrays)."""
+    out = []
+    used: set = set()
+    for name in axes_names:
+        if name is None:
+            out.append(None)
+            continue
+        cands = [a for a in ACT_RULES.get(name, ()) if a in mesh.axis_names
+                 and a not in used]
+        used.update(cands)
+        out.append(tuple(cands) if len(cands) > 1 else
+                   (cands[0] if cands else None))
+    return NamedSharding(mesh, P(*out))

@@ -1,0 +1,99 @@
+"""Fault-tolerance runtime pieces that run *inside* the training process.
+
+``StepTimer``   -- EMA step-time tracker with straggler detection (a step
+                   slower than ``threshold x EMA`` is flagged; at scale the
+                   flag feeds the supervisor / scheduler to hot-swap the
+                   slow host -- here it increments counters and callbacks).
+``Heartbeat``   -- background thread touching a file every ``interval``;
+                   the supervisor treats a stale heartbeat as a hang (the
+                   failure mode checkpoint-restart alone cannot catch).
+``FailureInjector`` -- deterministic fault injection (env
+                   ``REPRO_FAIL_AT_STEP``) used by the restart tests.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import threading
+import time
+from typing import Callable, List, Optional
+
+__all__ = ["StepTimer", "Heartbeat", "FailureInjector"]
+
+
+class StepTimer:
+    def __init__(self, ema_alpha: float = 0.1, threshold: float = 3.0,
+                 warmup: int = 3,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.ema_alpha = ema_alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.stragglers: List[int] = []
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> float:
+        dt = time.monotonic() - self._t0
+        self.count += 1
+        if self.ema is None:
+            self.ema = dt
+        elif self.count <= self.warmup:
+            self.ema = 0.5 * self.ema + 0.5 * dt
+        else:
+            if dt > self.threshold * self.ema:
+                self.stragglers.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt, self.ema)
+            self.ema = (1 - self.ema_alpha) * self.ema + self.ema_alpha * dt
+        return dt
+
+
+class Heartbeat:
+    def __init__(self, path, interval: float = 1.0):
+        self.path = pathlib.Path(path)
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.path.write_text(str(time.time()))
+            self._stop.wait(self.interval)
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *a):
+        self._stop.set()
+        self._thread.join(timeout=2)
+
+    @staticmethod
+    def age(path) -> float:
+        try:
+            return time.time() - float(pathlib.Path(path).read_text())
+        except (OSError, ValueError):
+            return float("inf")
+
+
+class FailureInjector:
+    """Crash deterministically at REPRO_FAIL_AT_STEP (once, flagged by a
+    sentinel file so the restarted process survives)."""
+
+    ENV = "REPRO_FAIL_AT_STEP"
+
+    def __init__(self, workdir):
+        self.fail_at = int(os.environ.get(self.ENV, "-1"))
+        self.sentinel = pathlib.Path(workdir) / ".failure_injected"
+
+    def check(self, step: int):
+        if (self.fail_at >= 0 and step == self.fail_at
+                and not self.sentinel.exists()):
+            self.sentinel.write_text(str(step))
+            raise RuntimeError(f"injected failure at step {step}")

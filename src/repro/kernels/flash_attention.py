@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blockwise (flash) attention forward.
+
+Online-softmax over KV tiles with running (max, sum) in VMEM scratch.
+Grid: (batch*heads, q_tiles, kv_tiles); the kv dimension is the innermost
+(sequential, "arbitrary") axis so the scratch accumulator carries across kv
+steps and the output tile is written once at the last step.
+
+MXU alignment: tiles are multiples of 128 in both seq and head dims; logits
+accumulate in f32 (preferred_element_type).  Causal and sliding-window masks
+are applied inside the tile; GQA is handled by the q->kv head index map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BKV = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bkv: int,
+            n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                  # [bq, d]
+    k = k_ref[0]                                  # [bkv, d]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+    k_pos = ki * bkv + jax.lax.iota(jnp.int32, bkv)[None, :]
+    mask = jnp.ones_like(logits, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                           # [bq, 1]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV,
+                    interpret: bool = False):
+    """q: [B,S,H,D]; k/v: [B,T,KV,D] (KV divides H).  Returns [B,S,H,D].
+
+    Tiles must divide S/T.  Softmax scale = 1/sqrt(D).
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    rep = h // kv
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    assert s % bq == 0 and t % bkv == 0, (s, bq, t, bkv)
+    n_kv = t // bkv
+    scale = 1.0 / np.sqrt(d)
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bkv=bkv, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, qi, ki: (bh // rep, ki, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, qi, ki: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

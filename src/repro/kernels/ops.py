@@ -1,0 +1,51 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``impl`` selects the execution path:
+  * "pallas"    -- compiled TPU kernel (the deploy target)
+  * "interpret" -- Pallas interpret mode (CPU-validatable, same kernel body)
+  * "reference" -- pure-jnp oracle (autodiff-friendly)
+
+On this CPU container the default is "interpret" for tests and "reference"
+inside jitted model code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import page_hist as _ph
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "threshold", "impl"))
+def page_hist(ids, hotness, *, alpha: float = 0.5, threshold: float = 1.0,
+              impl: str = "interpret"):
+    if impl == "reference":
+        return _ref.page_hist_ref(ids, hotness, alpha=alpha,
+                                  threshold=threshold)
+    return _ph.page_hist(ids, hotness, alpha=alpha, threshold=threshold,
+                         interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bkv", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = _fa.DEFAULT_BQ, bkv: int = _fa.DEFAULT_BKV,
+                    impl: str = "interpret"):
+    if impl == "reference":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                               bkv=bkv, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    impl: str = "interpret"):
+    if impl == "reference":
+        return _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                        lengths)
+    return _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
+                               interpret=(impl == "interpret"))

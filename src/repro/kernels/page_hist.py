@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused per-period page-access histogram + EMA hotness.
+
+This is the page scheduler's monitor step (paper SII-A: scan accessed bits,
+EMA-smooth, classify hot/cold) -- the hottest loop of both the simulator and
+the KV-tiering runtime, fused into one pass.
+
+Layout: the access slice (one period, P ids) is small and replicated into
+VMEM; the page state (num_pages-wide hotness) is tiled over the grid.  Each
+grid step owns a PAGE_TILE-wide slab of pages and counts matches against the
+whole slice with a vectorised compare (VPU work, no gather/scatter -- TPUs
+hate scatters; a [TILE, P] compare matrix is the TPU-native formulation of a
+histogram).
+
+  counts[p]  = sum_i (ids[i] == p)
+  hotness'   = alpha * counts + (1 - alpha) * hotness
+  hot[p]     = hotness' >= threshold
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAGE_TILE = 512
+
+
+def _kernel(ids_ref, hot_ref, counts_ref, new_hot_ref, mask_ref, *,
+            alpha: float, threshold: float, tile: int):
+    t = pl.program_id(0)
+    base = t * tile
+    ids = ids_ref[...]                        # [P] int32 (whole slice)
+    page_ids = base + jax.lax.iota(jnp.int32, tile)
+    # [TILE, P] compare matrix -> per-page counts
+    eq = (ids[None, :] == page_ids[:, None]).astype(jnp.float32)
+    counts = jnp.sum(eq, axis=1)
+    hot = hot_ref[...]
+    new_hot = alpha * counts + (1.0 - alpha) * hot
+    counts_ref[...] = counts
+    new_hot_ref[...] = new_hot
+    mask_ref[...] = (new_hot >= threshold)
+
+
+def page_hist(ids: jnp.ndarray, hotness: jnp.ndarray, *, alpha: float = 0.5,
+              threshold: float = 1.0, tile: int = PAGE_TILE,
+              interpret: bool = False):
+    """ids: int32[P] page ids of one period (pad with -1); hotness:
+    f32[num_pages].  Returns (counts, new_hotness, hot_mask)."""
+    num_pages = hotness.shape[0]
+    assert num_pages % tile == 0, (num_pages, tile)
+    grid = (num_pages // tile,)
+    kernel = functools.partial(_kernel, alpha=alpha, threshold=threshold,
+                               tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(ids.shape, lambda t: (0,)),          # replicated
+            pl.BlockSpec((tile,), lambda t: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_pages,), jnp.float32),
+            jax.ShapeDtypeStruct((num_pages,), jnp.float32),
+            jax.ShapeDtypeStruct((num_pages,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ids, hotness)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: decode attention over a paged KV working set.
+
+The TPU-native consumer of the Cori-tuned tiering runtime: KV lives in
+fixed-size pages; a per-sequence page table indirects into the physical
+page pool (the HBM working set managed by ``repro.memtier``).  The page
+table is a *scalar-prefetch* operand -- its values drive the BlockSpec
+index_map, so each grid step DMAs exactly the physical page it needs
+(hardware page-gather; no materialised gather HLO).
+
+Grid: (batch, pages_per_seq); online softmax carries (m, l, acc) in VMEM
+scratch across the page axis, exactly like flash attention but with the kv
+tile = one page and block indices taken from the page table.
+
+q: [B, H, D]; k_pages/v_pages: [P_phys, page, KV, D];
+page_table: int32[B, pages_per_seq]; lengths: int32[B].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [H, D]
+    k = k_ref[0]                                   # [page, KV, D]
+    v = v_ref[0]
+    h, d = q.shape
+    kvh = k.shape[1]
+    rep = h // kvh
+    length = lengths[b]
+
+    # token positions covered by this logical page
+    pos = pi * page + jax.lax.iota(jnp.int32, page)
+    valid = pos < length                           # [page]
+
+    qg = q.reshape(kvh, rep, d)
+    logits = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale   # [kvh, rep, page]
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+
+    m_prev = m_scr[...]                            # [kvh, rep, 1]... flat [h,1]
+    lg = logits.reshape(h, page)
+    m_cur = jnp.max(lg, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(lg - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    pg = p.reshape(kvh, rep, page)
+    ctx = jax.lax.dot_general(
+        pg.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)        # [kvh, rep, d]
+    acc_scr[...] = acc_scr[...] * corr + ctx.reshape(h, d)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(pi == n_pages - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    interpret: bool = False):
+    """Decode attention over paged KV.  Returns [B, H, D]."""
+    b, h, d = q.shape
+    p_phys, page, kvh, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    assert h % kvh == 0
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_kernel, page=page, n_pages=n_pages,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, pi, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, page, kvh, d),
+                         lambda bi, pi, pt, ln: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page, kvh, d),
+                         lambda bi, pi, pt, ln: (pt[bi, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, pi, pt, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

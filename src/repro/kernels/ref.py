@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def page_hist_ref(ids, hotness, *, alpha: float = 0.5, threshold: float = 1.0):
+    """ids: int32[P] (pad -1); hotness: f32[num_pages]."""
+    num_pages = hotness.shape[0]
+    counts = jnp.zeros((num_pages,), jnp.float32).at[
+        jnp.clip(ids, 0, num_pages - 1)].add(
+        jnp.where(ids >= 0, 1.0, 0.0))
+    new_hot = alpha * counts + (1 - alpha) * hotness
+    return counts, new_hot, new_hot >= threshold
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,S,H,D]; k/v: [B,T,KV,D]."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    kr = jnp.repeat(k, h // kv, axis=2)
+    vr = jnp.repeat(v, h // kv, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                        preferred_element_type=jnp.float32) / np.sqrt(d)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), vr)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """q: [B,H,D]; pages: [P,page,KV,D]; page_table: [B,n]; lengths: [B]."""
+    b, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    n = page_table.shape[1]
+    k = k_pages[page_table]                     # [B, n, page, KV, D]
+    v = v_pages[page_table]
+    k = k.reshape(b, n * page, kvh, d)
+    v = v.reshape(b, n * page, kvh, d)
+    kr = jnp.repeat(k, h // kvh, axis=2)
+    vr = jnp.repeat(v, h // kvh, axis=2)
+    logits = jnp.einsum("bhd,bthd->bht", q, kr,
+                        preferred_element_type=jnp.float32) / np.sqrt(d)
+    pos = jnp.arange(n * page)[None, :]
+    logits = jnp.where((pos < lengths[:, None])[:, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", w.astype(vr.dtype), vr)

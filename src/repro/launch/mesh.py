@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (16, 16) ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) ("pod", "data", "model");
+the "pod" axis carries cross-DCN data parallelism (optionally with int8
+gradient compression -- see repro.distributed.collectives).
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (possibly fake) host devices exist --
+    used by tests and the local examples."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns the full argument pytree for the cell's
+step function -- weak-type-correct, shardable, zero allocation.  Modality
+frontends are stubs per the assignment: the VLM cell gets precomputed patch
+embeddings, the audio cell gets a conditioning sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import model as mdl
+from repro.models.config import ModelConfig
+from repro.train import optim, step as tstep
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step_kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+def cell(arch: str, shape: str) -> Cell:
+    cfg = C.get(arch)
+    sh = C.SHAPES[shape]
+    return Cell(arch, shape, cfg, sh["step"], sh["seq_len"],
+                sh["global_batch"])
+
+
+def batch_specs(c: Cell) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs."""
+    cfg, b = c.cfg, c.global_batch
+    s = c.seq_len
+    out: Dict[str, Any] = {}
+    p = cfg.prefix_len or 0
+    text = s - p
+    out["tokens"] = SDS((b, text), jnp.int32)
+    if c.step_kind == "train":
+        out["targets"] = SDS((b, s), jnp.int32)
+    if p:
+        out["extra_embeds"] = SDS((b, p, cfg.d_model), jnp.bfloat16)
+    if cfg.cond_len:
+        out["cond"] = SDS((b, cfg.cond_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_specs(c: Cell) -> Dict[str, Any]:
+    """Decode-step inputs: one new token against a seq_len KV cache."""
+    cfg, b = c.cfg, c.global_batch
+    cache = jax.eval_shape(
+        lambda: mdl.init_cache(cfg, b, c.seq_len, jnp.bfloat16))
+    out = {"cache": cache,
+           "tokens": SDS((b, 1), jnp.int32),
+           "cur_pos": SDS((b,), jnp.int32)}
+    if cfg.cond_len:
+        out["cond"] = SDS((b, cfg.cond_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def state_specs_shapes(cfg: ModelConfig, ocfg: optim.OptConfig):
+    """(state ShapeDtypeStruct tree, logical spec tree) without allocation."""
+    def build():
+        return tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg)[0]
+
+    shapes = jax.eval_shape(build)
+    pspecs = mdl.init_specs_only(cfg)
+    return shapes, tstep.state_specs(pspecs, ocfg)

@@ -1,0 +1,139 @@
+"""Cori-tuned KV-page tiering runtime (the paper's technique on TPU).
+
+``replay`` drives a TieringManager over a per-step page-access workload
+(real attention masses from ``repro.serve``'s monitor, or synthetic
+patterns from ``workload``); ``cori_tune_period`` runs the full Cori loop
+(profile -> DR -> candidate ladder -> trial windows) against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import cori
+from repro.memtier.tiering import PagedPools, TierConfig, TieringManager
+
+__all__ = ["PagedPools", "TierConfig", "TieringManager", "replay",
+           "cori_tune_period", "resident_mask"]
+
+
+def resident_mask(mgr: TieringManager, pools: Optional[PagedPools]):
+    if pools is None:
+        return np.zeros(mgr.n, bool)
+    return pools.slot_of >= 0
+
+
+def replay(page_mass_seq: np.ndarray, cfg: TierConfig,
+           pools: Optional[PagedPools] = None) -> TieringManager:
+    """Run the tiering loop over a [steps, n_logical] attention-mass
+    sequence.  When `pools` is None, residency is tracked symbolically
+    (no physical copies) -- used for fast period trials; the physical
+    gather/scatter path is exercised by tests/serve."""
+    steps, n = page_mass_seq.shape
+    mgr = TieringManager(n, cfg)
+    symbolic = pools is None
+    resident = np.zeros(n, bool)
+    if symbolic:
+        # interleaved initial residency (paper SII-B)
+        idx = (np.arange(cfg.hbm_pages) * n) // max(1, cfg.hbm_pages)
+        resident[idx] = True
+        slot_of = np.full(n, -1, np.int32)
+        slot_of[idx] = np.arange(cfg.hbm_pages)
+    for t in range(steps):
+        if symbolic:
+            mgr.on_step(page_mass_seq[t], resident)
+            if (t + 1) % cfg.period_steps == 0:
+                _symbolic_tier(mgr, resident)
+        else:
+            mgr.on_step(page_mass_seq[t], resident_mask(mgr, pools))
+            pools = mgr.maybe_tier(pools)
+    return mgr
+
+
+def _symbolic_tier(mgr: TieringManager, resident: np.ndarray):
+    cfg = mgr.cfg
+    a = cfg.ema_alpha
+    mgr.hotness = a * mgr.counts_since_tier + (1 - a) * mgr.hotness
+    mgr.counts_since_tier[:] = 0.0
+    score = (mgr.hotness * 1e6 + (mgr.last_access + 1) / (mgr.step + 1)
+             + 0.5 * resident)
+    desired = np.argsort(-score, kind="stable")[: cfg.hbm_pages]
+    new_res = np.zeros(mgr.n, bool)
+    new_res[desired] = True
+    n_mig = int((new_res & ~resident).sum())
+    mgr.migrations += n_mig
+    mgr.data_moved_pages += 2 * n_mig
+    mgr.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
+    resident[:] = new_res
+
+
+def cori_tune_period(page_mass_seq: np.ndarray, cfg: TierConfig,
+                     patience: int = 2,
+                     max_trials: Optional[int] = None):
+    """Full Cori loop over the tiering runtime.
+
+    1. Reuse Collector: one profiling window (tiering at the default
+       period) collects the access log.
+    2. Frequency Generator: DR + candidate ladder in the step domain.
+    3. Tuner: trial windows at each candidate period, stop on
+       no-improvement.
+
+    Returns (TuneResult, dominant_reuse)."""
+    profile = replay(page_mass_seq, cfg)
+    cands = profile.cori_candidates(horizon_steps=page_mass_seq.shape[0])
+
+    def evaluate(period: float) -> float:
+        p = max(1, int(round(period)))
+        mgr = replay(page_mass_seq,
+                     dataclasses.replace(cfg, period_steps=p))
+        return mgr.modeled_time
+
+    tuner = cori.Tuner(evaluate, patience=patience, max_trials=max_trials)
+    hist = profile.reuse_histogram()
+    return tuner.run(cands), cori.dominant_reuse(hist)
+
+
+class AdaptiveTuner:
+    """Online re-tuning (the paper's SIV-D extension): monitor the working
+    set's hit rate; when it drifts below ``retune_ratio`` x the rate
+    observed right after tuning, the access pattern has changed -- rerun
+    the Cori loop (profile window -> DR -> ladder -> trials) on the recent
+    window.  Static Cori tunes once; this closes the loop for phase-changing
+    workloads (e.g. a serving mix shifting from RAG loops to random
+    retrieval)."""
+
+    def __init__(self, cfg: TierConfig, window: int = 64,
+                 retune_ratio: float = 0.7):
+        self.cfg = cfg
+        self.window = window
+        self.retune_ratio = retune_ratio
+        self.period = cfg.period_steps
+        self.baseline_hit = None
+        self.retunes = 0
+        self._buf = []
+
+    def _hitrate(self, masses: "np.ndarray") -> float:
+        import dataclasses as _dc
+        mgr = replay(masses, _dc.replace(self.cfg, period_steps=self.period))
+        return mgr.hits / max(mgr.hits + mgr.misses, 1)
+
+    def observe(self, page_mass) -> int:
+        """Feed one decode step's page masses; returns the current period."""
+        import dataclasses as _dc
+        self._buf.append(page_mass)
+        if len(self._buf) >= self.window:
+            import numpy as _np
+            masses = _np.stack(self._buf)
+            self._buf = []
+            hit = self._hitrate(masses)
+            if self.baseline_hit is None:
+                self.baseline_hit = hit
+            elif hit < self.retune_ratio * self.baseline_hit:
+                res, _dr = cori_tune_period(
+                    masses, _dc.replace(self.cfg, period_steps=self.period))
+                self.period = max(1, int(round(res.chosen_period)))
+                self.baseline_hit = self._hitrate(masses)
+                self.retunes += 1
+        return self.period

@@ -1,0 +1,171 @@
+"""Cori-tuned HBM <-> host KV-page tiering (the paper's technique, adapted).
+
+Mapping (DESIGN.md S3):
+    DRAM            -> HBM working set      (hbm_pages physical slots)
+    PMEM            -> host backing store   (all logical pages)
+    page scheduler  -> ``TieringManager.maybe_tier`` every ``period`` steps
+    accessed bits   -> per-page attention mass from the decode step
+    move_pages()    -> ``migrate`` (gather/scatter on the physical pools)
+    Cori            -> ``repro.core.cori`` tuning ``period`` from the
+                       attention-reuse histogram (step domain)
+
+The page-selection rule is the paper's verbatim: EMA hotness ranks pages,
+top-capacity hot pages swap in against LRU residents, swaps capped by
+capacity.  Costs are modeled with the same structure as ``core.sim`` but
+with TPU-tier constants (HBM vs PCIe-host), since this container has no
+real TPU clock: a decode step pays 1 unit per resident-page touch,
+``miss_penalty`` per non-resident touch (on-demand host fetch), plus
+migration and wakeup costs per tiering period.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cori, reuse
+from repro.kernels import ops
+
+__all__ = ["TierConfig", "TieringManager", "PagedPools"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    page_size: int = 16            # tokens per KV page
+    hbm_pages: int = 0             # working-set capacity (physical slots)
+    period_steps: int = 8          # tiering period (what Cori tunes)
+    ema_alpha: float = 0.5
+    access_threshold: float = 0.05  # attention mass to count as "accessed"
+    # modeled costs (units: one HBM page-read)
+    miss_penalty: float = 32.0     # on-demand host fetch (PCIe ~25GB/s vs HBM)
+    mig_cost: float = 16.0         # async page migration
+    wakeup_cost: float = 4.0       # scheduler wakeup per period
+
+
+@dataclasses.dataclass
+class PagedPools:
+    """Physical KV page pools for one representative layer group.
+
+    host pools hold every logical page; the HBM pool holds the resident
+    working set.  ``slot_of[logical] == -1`` means host-only."""
+    k_host: jnp.ndarray            # [n_logical, page, kv, d]
+    v_host: jnp.ndarray
+    k_hbm: jnp.ndarray             # [hbm_pages, page, kv, d]
+    v_hbm: jnp.ndarray
+    slot_of: np.ndarray            # int32[n_logical] -> hbm slot | -1
+    page_of_slot: np.ndarray       # int32[hbm_pages] -> logical | -1
+
+    @classmethod
+    def create(cls, k_pages, v_pages, hbm_pages: int):
+        """Interleaved initial residency (paper SII-B initial placement)."""
+        n = k_pages.shape[0]
+        init = ((np.arange(hbm_pages, dtype=np.int64) * n)
+                // max(1, hbm_pages)).astype(np.int32)
+        slot_of = np.full((n,), -1, np.int32)
+        slot_of[init] = np.arange(hbm_pages)
+        return cls(
+            k_host=k_pages, v_host=v_pages,
+            k_hbm=k_pages[init], v_hbm=v_pages[init],
+            slot_of=slot_of,
+            page_of_slot=init.copy())
+
+
+@jax.jit
+def _migrate(pool_hbm, pool_host, slots, logicals):
+    """Copy host pages `logicals` into HBM `slots` (the move_pages analogue;
+    on real hardware this is the pinned_host->device DMA)."""
+    return pool_hbm.at[slots].set(pool_host[logicals])
+
+
+class TieringManager:
+    """Periodic page scheduler over a PagedPools working set."""
+
+    def __init__(self, n_logical: int, cfg: TierConfig):
+        self.cfg = cfg
+        self.n = n_logical
+        self.hotness = np.zeros(n_logical, np.float64)
+        self.last_access = np.full(n_logical, -1.0)
+        self.step = 0
+        self.access_log: List[np.ndarray] = []   # accessed page ids per step
+        self.counts_since_tier = np.zeros(n_logical, np.float64)
+        # accounting
+        self.migrations = 0
+        self.modeled_time = 0.0
+        self.data_moved_pages = 0
+        self.hits = 0
+        self.misses = 0
+
+    # -- monitor -----------------------------------------------------------
+    def on_step(self, page_mass: np.ndarray, resident: np.ndarray):
+        """page_mass: f32[n_logical] attention mass this decode step;
+        resident: bool[n_logical]."""
+        accessed = page_mass >= self.cfg.access_threshold
+        ids = np.nonzero(accessed)[0].astype(np.int32)
+        self.access_log.append(ids)
+        self.counts_since_tier[accessed] += 1.0
+        self.last_access[accessed] = self.step
+        hits = accessed & resident
+        misses = accessed & ~resident
+        self.hits += int(hits.sum())
+        self.misses += int(misses.sum())
+        self.modeled_time += hits.sum() * 1.0 + misses.sum() * self.cfg.miss_penalty
+        self.step += 1
+
+    # -- the page scheduler (paper SII-B swap rule) --------------------------
+    def maybe_tier(self, pools: PagedPools) -> PagedPools:
+        if self.step == 0 or self.step % self.cfg.period_steps != 0:
+            return pools
+        cfg = self.cfg
+        a = cfg.ema_alpha
+        self.hotness = a * self.counts_since_tier + (1 - a) * self.hotness
+        self.counts_since_tier[:] = 0.0
+        # rank: hotness primary, recency secondary, residency tertiary
+        resident = pools.slot_of >= 0
+        score = (self.hotness * 1e6
+                 + (self.last_access + 1) / (self.step + 1)
+                 + 0.5 * resident)
+        desired = np.argsort(-score, kind="stable")[: cfg.hbm_pages]
+        desired_set = np.zeros(self.n, bool)
+        desired_set[desired] = True
+        evict = np.nonzero(resident & ~desired_set)[0]
+        bring = np.nonzero(desired_set & ~resident)[0]
+        n_mig = min(len(evict), len(bring))
+        evict, bring = evict[:n_mig], bring[:n_mig]
+        if n_mig:
+            slots = pools.slot_of[evict].copy()
+            pools.slot_of[evict] = -1
+            pools.slot_of[bring] = slots
+            pools.page_of_slot[slots] = bring
+            pools = dataclasses.replace(
+                pools,
+                k_hbm=_migrate(pools.k_hbm, pools.k_host, jnp.asarray(slots),
+                               jnp.asarray(bring)),
+                v_hbm=_migrate(pools.v_hbm, pools.v_host, jnp.asarray(slots),
+                               jnp.asarray(bring)))
+        self.migrations += int(n_mig)
+        self.data_moved_pages += 2 * int(n_mig)
+        self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
+        return pools
+
+    # -- Cori integration ----------------------------------------------------
+    def reuse_histogram(self, bin_width: int = 4) -> reuse.ReuseHistogram:
+        """Reuse distances in the decode-step domain from the access log."""
+        last = np.full(self.n, -1)
+        gaps: List[int] = []
+        for t, ids in enumerate(self.access_log):
+            prev = last[ids]
+            gaps.extend((t - prev[prev >= 0]).tolist())
+            last[ids] = t
+        h = reuse.loop_duration_histogram(np.asarray(gaps, np.int64),
+                                          bin_width=bin_width)
+        return reuse.prune_insignificant(h)
+
+    def cori_candidates(self, horizon_steps: int) -> np.ndarray:
+        hist = self.reuse_histogram()
+        dr = cori.dominant_reuse(hist)
+        return cori.candidate_periods(dr, float(horizon_steps),
+                                      min_period=1.0)
+

@@ -1,0 +1,557 @@
+"""Model assembly: init / train-forward / prefill / decode over segments.
+
+A model is a list of segments ``(pattern, repeats)``; parameters of each
+segment are stacked ``[R, ...]`` and executed with ``lax.scan`` over repeats
+(pattern slots unrolled in the body), so HLO size scales with the pattern
+length, not the layer count.  ``jax.checkpoint`` (remat) wraps the scan body
+when ``cfg.remat``.
+
+All functions are pure; sharding is applied externally (pjit in_shardings
+from the spec tree + optional ``shard_fn`` activation constraints).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.config import LayerKind, ModelConfig, parse_kind
+
+Params = Dict[str, Any]
+_IDENT = lambda x, names: x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _slot_init(key, cfg: ModelConfig, kind: LayerKind):
+    """(params, specs) for one layer slot."""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = L.rms_norm_init(cfg.d_model)
+    if kind.is_attention:
+        init = L.mla_init if kind.mla else L.attention_init
+        p["attn"], s["attn"] = init(ks[0], cfg)
+    elif kind.base == "mlstm":
+        p["cell"], s["cell"] = R.mlstm_init(ks[0], cfg)
+    elif kind.base == "slstm":
+        p["cell"], s["cell"] = R.slstm_init(ks[0], cfg)
+    elif kind.base == "rglru":
+        p["cell"], s["cell"] = R.rglru_init(ks[0], cfg)
+    if kind.xattn:
+        p["norm_x"], s["norm_x"] = L.rms_norm_init(cfg.d_model)
+        p["xattn"], s["xattn"] = L.attention_init(ks[1], cfg, cross=True)
+    if kind.moe:
+        p["norm2"], s["norm2"] = L.rms_norm_init(cfg.d_model)
+        p["moe"], s["moe"] = M.moe_init(ks[2], cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"], s["norm2"] = L.rms_norm_init(cfg.d_model)
+        p["mlp"], s["mlp"] = L.mlp_init(ks[2], cfg)
+    return p, s
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """Returns (params, specs).  Segment params stacked [R, ...] with a
+    leading "layers" spec axis (always unsharded)."""
+    ks = jax.random.split(key, len(cfg.segments) + 2)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"], specs["embed"] = L.embedding_init(ks[0], cfg)
+    params["final_norm"], specs["final_norm"] = L.rms_norm_init(cfg.d_model)
+    segs_p, segs_s = [], []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        slot_ps, slot_ss = [], []
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            kseed = jax.random.fold_in(ks[si + 2], j)
+
+            def one(k):
+                return _slot_init(k, cfg, kind)[0]
+
+            stacked = jax.vmap(one)(jax.random.split(kseed, repeats))
+            _, spec = _slot_init(kseed, cfg, kind)
+            spec = jax.tree.map(
+                lambda ax: ("layers",) + tuple(ax) if isinstance(ax, tuple)
+                else ax, spec,
+                is_leaf=lambda x: isinstance(x, tuple) or x is None)
+            slot_ps.append(stacked)
+            slot_ss.append(spec)
+        segs_p.append(slot_ps)
+        segs_s.append(slot_ss)
+    params["segments"] = segs_p
+    specs["segments"] = segs_s
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_seq(slot_p, cfg: ModelConfig, kind: LayerKind, x, *,
+                     positions, cond, mesh, state=None, shard=_IDENT):
+    """Sequence-mode block (train/prefill).  Returns (x, cache_entry, aux)."""
+    aux = jnp.float32(0.0)
+    h = L.rms_norm(x, slot_p["norm1"])
+    cache_entry = None
+    if kind.is_attention:
+        window = cfg.window_size if kind.base == "local" else 0
+        mask = L.causal_mask(positions, positions, window=window,
+                             prefix_len=cfg.prefix_len)
+        if kind.mla:
+            out, (ckv, krope) = L.mla_apply(slot_p["attn"], cfg, h, positions,
+                                            mask)
+            cache_entry = {"ckv": ckv, "krope": krope}
+        else:
+            out, (k, v) = L.attention_apply(slot_p["attn"], cfg, h, h,
+                                            positions, mask)
+            cache_entry = {"k": k, "v": v}
+        x = x + out
+    else:
+        apply = {"mlstm": R.mlstm_apply, "slstm": R.slstm_apply,
+                 "rglru": R.rglru_apply}[kind.base]
+        out, new_state = apply(slot_p["cell"], cfg, h, state)
+        cache_entry = new_state
+        x = x + out
+    x = shard(x, ("batch", "seq", "embed"))
+    if kind.xattn and cond is not None:
+        hx = L.rms_norm(x, slot_p["norm_x"])
+        cpos = jnp.arange(cond.shape[1])[None]
+        cmask = jnp.ones((1, hx.shape[1], cond.shape[1]), bool)
+        out, _ = L.attention_apply(slot_p["xattn"], cfg, hx, cond,
+                                   positions, cmask, kv_positions=cpos,
+                                   use_rope=False)
+        x = x + out
+    if kind.moe:
+        h2 = L.rms_norm(x, slot_p["norm2"])
+        out, aux = M.moe_apply(slot_p["moe"], cfg, h2, mesh)
+        x = x + out
+    elif cfg.d_ff > 0 and "mlp" in slot_p:
+        h2 = L.rms_norm(x, slot_p["norm2"])
+        x = x + L.mlp_apply(slot_p["mlp"], cfg, h2)
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, cache_entry, aux
+
+
+def _apply_block_decode(slot_p, cfg: ModelConfig, kind: LayerKind, x, cache,
+                        *, cur_pos, cond, mesh=None, shard=_IDENT):
+    """One-token decode.  cache: this slot's cache for one repeat.
+    Returns (x, new_cache)."""
+    h = L.rms_norm(x, slot_p["norm1"])
+    b = x.shape[0]
+    if kind.is_attention:
+        window = cfg.window_size if kind.base == "local" else 0
+        if kind.mla:
+            out, c_new, kr_new = L.mla_decode(
+                slot_p["attn"], cfg, h, cache["ckv"], cache["krope"],
+                cache["pos"], cur_pos)
+            wslot = _write_slot(cache["pos"], cur_pos, window)
+            new_cache = {
+                "ckv": _scatter(cache["ckv"], wslot, c_new[:, 0]),
+                "krope": _scatter(cache["krope"], wslot, kr_new[:, 0]),
+                "pos": _scatter(cache["pos"], wslot, cur_pos),
+            }
+        else:
+            out, k_new, v_new = L.attention_decode(
+                slot_p["attn"], cfg, h, cache["k"], cache["v"], cache["pos"],
+                cur_pos, window=window)
+            wslot = _write_slot(cache["pos"], cur_pos, window)
+            new_cache = {
+                "k": _scatter(cache["k"], wslot, k_new[:, 0]),
+                "v": _scatter(cache["v"], wslot, v_new[:, 0]),
+                "pos": _scatter(cache["pos"], wslot, cur_pos),
+            }
+        x = x + out
+    else:
+        step = {"mlstm": R.mlstm_step, "slstm": R.slstm_step,
+                "rglru": R.rglru_step}[kind.base]
+        out, new_cache = step(slot_p["cell"], cfg, h, cache)
+        x = x + out
+    if kind.xattn and cond is not None:
+        hx = L.rms_norm(x, slot_p["norm_x"])
+        cpos = jnp.arange(cond.shape[1])[None]
+        cmask = jnp.ones((1, 1, cond.shape[1]), bool)
+        out, _ = L.attention_apply(slot_p["xattn"], cfg, hx, cond,
+                                   cur_pos[:, None], cmask, kv_positions=cpos,
+                                   use_rope=False)
+        x = x + out
+    if kind.moe:
+        h2 = L.rms_norm(x, slot_p["norm2"])
+        out, _ = M.moe_apply(slot_p["moe"], cfg, h2, mesh)
+        x = x + out
+    elif cfg.d_ff > 0 and "mlp" in slot_p:
+        h2 = L.rms_norm(x, slot_p["norm2"])
+        x = x + L.mlp_apply(slot_p["mlp"], cfg, h2)
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, new_cache
+
+
+def _write_slot(cache_pos, cur_pos, window: int):
+    """Cache slot to write: pos for full caches, ring slot for windows."""
+    t = cache_pos.shape[1]
+    if window > 0 and t == window:
+        return cur_pos % window
+    return jnp.minimum(cur_pos, t - 1)
+
+
+def _scatter(cache, slot, entry):
+    """cache: [B,T,...]; slot: [B]; entry: [B,...]."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), slot].set(entry.astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# segment runners
+# ---------------------------------------------------------------------------
+
+
+def _strip_layers(spec_tree):
+    is_axes = lambda t: t is None or (isinstance(t, tuple) and all(
+        isinstance(a, (str, type(None))) for a in t))
+    return jax.tree.map(
+        lambda ax: tuple(ax[1:]) if isinstance(ax, tuple) else ax,
+        spec_tree, is_leaf=is_axes)
+
+
+def _constrain_slots(slot_ps, slot_specs, pshard):
+    if pshard is None or slot_specs is None:
+        return slot_ps
+    is_axes = lambda t: t is None or (isinstance(t, tuple) and all(
+        isinstance(a, (str, type(None))) for a in t))
+    out = []
+    for ps, sp in zip(slot_ps, slot_specs):
+        leaves, treedef = jax.tree.flatten(ps)
+        specs = treedef.flatten_up_to(sp)
+        out.append(jax.tree.unflatten(
+            treedef, [pshard(l, a) if isinstance(a, tuple) else l
+                      for l, a in zip(leaves, specs)]))
+    return out
+
+
+def _run_segments_seq(params, cfg: ModelConfig, x, *, positions, cond, mesh,
+                      states=None, shard=_IDENT, collect_cache=False,
+                      param_specs=None, pshard=None):
+    """Run all segments in sequence mode.  states (optional) mirror the
+    segment/slot structure with [R, ...] stacked leaves (recurrent only).
+    Returns (x, caches, aux_total)."""
+    aux_total = jnp.float32(0.0)
+    caches: List[List[Any]] = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        kinds = [parse_kind(s) for s in pattern]
+        slot_params = params["segments"][si]
+        seg_states = states["segments"][si] if states is not None else None
+
+        slot_specs = (_strip_layers(param_specs["segments"][si])
+                      if param_specs is not None else None)
+
+        if cfg.unroll_layers:
+            entries_all = []
+
+            def one_repeat(xx, aux, slot_ps, slot_sts):
+                slot_ps = _constrain_slots(slot_ps, slot_specs, pshard)
+                entries = []
+                for j, kind in enumerate(kinds):
+                    st = slot_sts[j] if slot_sts is not None else None
+                    xx, entry, a = _apply_block_seq(
+                        slot_ps[j], cfg, kind, xx, positions=positions,
+                        cond=cond, mesh=mesh, state=st, shard=shard)
+                    entries.append(entry)
+                    aux = aux + a
+                return xx, aux, entries
+
+            fn = (jax.checkpoint(one_repeat, static_argnums=())
+                  if cfg.remat else one_repeat)
+            for r in range(repeats):
+                slot_ps_r = jax.tree.map(lambda a: a[r], slot_params)
+                sts_r = (jax.tree.map(lambda a: a[r], seg_states)
+                         if seg_states is not None else None)
+                x, aux_total, entries = fn(x, aux_total, slot_ps_r, sts_r)
+                entries_all.append(entries)
+            if collect_cache:
+                stacked = []
+                for j in range(len(kinds)):
+                    stacked.append(jax.tree.map(
+                        lambda *xs: jnp.stack(xs, axis=0),
+                        *[e[j] for e in entries_all]))
+                caches.append(stacked)
+            else:
+                caches.append(None)
+            continue
+
+        def body(carry, per_repeat):
+            xx, aux = carry
+            slot_ps, slot_sts = per_repeat
+            slot_ps = _constrain_slots(slot_ps, slot_specs, pshard)
+            entries = []
+            for j, kind in enumerate(kinds):
+                st = slot_sts[j] if slot_sts is not None else None
+                xx, entry, a = _apply_block_seq(
+                    slot_ps[j], cfg, kind, xx, positions=positions, cond=cond,
+                    mesh=mesh, state=st, shard=shard)
+                entries.append(entry)
+            return (xx, aux + a), entries
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        xs = (slot_params,
+              seg_states if seg_states is not None else [None] * len(kinds))
+        if seg_states is None:
+            xs = (slot_params, [jnp.zeros((repeats,))] * len(kinds))
+
+            def body_fn2(carry, pr):
+                slot_ps, _ = pr
+                return body_fn(carry, (slot_ps, None))
+
+            (x, aux_total), entries = jax.lax.scan(
+                body_fn2, (x, aux_total), xs)
+        else:
+            (x, aux_total), entries = jax.lax.scan(
+                body_fn, (x, aux_total), xs)
+        caches.append(entries if collect_cache else None)
+    return x, caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None, cond=None,
+            mesh=None, shard=_IDENT, param_specs=None, pshard=None):
+    """Training forward.  tokens: [B,S_text]; extra_embeds (VLM/audio
+    frontend stub): [B,P,d] prepended before the token embeddings.
+    Returns (logits [B,S,V], aux_loss)."""
+    x = L.embed(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None]
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    x, _, aux = _run_segments_seq(params, cfg, x, positions=positions,
+                                  cond=cond, mesh=mesh, shard=shard,
+                                  param_specs=param_specs, pshard=pshard)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x)
+    logits = shard(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Decode cache pytree mirroring the segment structure."""
+    segs = []
+    for pattern, repeats in cfg.segments:
+        slots = []
+        for kind_s in pattern:
+            kind = parse_kind(kind_s)
+            if kind.is_attention:
+                t = (min(cfg.window_size, max_len)
+                     if kind.base == "local" else max_len)
+                if kind.mla:
+                    m = cfg.mla
+                    c = {"ckv": jnp.zeros((repeats, batch, t, m.kv_lora_rank),
+                                          dtype),
+                         "krope": jnp.zeros((repeats, batch, t, m.qk_rope_dim),
+                                            dtype),
+                         "pos": jnp.full((repeats, batch, t), -1, jnp.int32)}
+                else:
+                    kv, hd = cfg.num_kv_heads, cfg.head_dim
+                    c = {"k": jnp.zeros((repeats, batch, t, kv, hd), dtype),
+                         "v": jnp.zeros((repeats, batch, t, kv, hd), dtype),
+                         "pos": jnp.full((repeats, batch, t), -1, jnp.int32)}
+            else:
+                zero = {"mlstm": R.mlstm_zero_state, "slstm": R.slstm_zero_state,
+                        "rglru": R.rglru_zero_state}[kind.base]
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (repeats,) + a.shape),
+                    zero(cfg, batch))
+            slots.append(c)
+        segs.append(slots)
+    return {"segments": segs}
+
+
+def cache_specs(cfg: ModelConfig, shape_kind: str = "decode"):
+    """Logical-axis spec tree matching ``init_cache`` output."""
+    segs = []
+    for pattern, repeats in cfg.segments:
+        slots = []
+        for kind_s in pattern:
+            kind = parse_kind(kind_s)
+            if kind.is_attention:
+                if kind.mla:
+                    c = {"ckv": ("layers", "batch", "kv_seq", None),
+                         "krope": ("layers", "batch", "kv_seq", None),
+                         "pos": ("layers", "batch", "kv_seq")}
+                else:
+                    c = {"k": ("layers", "batch", "kv_seq", None, None),
+                         "v": ("layers", "batch", "kv_seq", None, None),
+                         "pos": ("layers", "batch", "kv_seq")}
+            else:
+                zero = {"mlstm": R.mlstm_zero_state, "slstm": R.slstm_zero_state,
+                        "rglru": R.rglru_zero_state}[kind.base]
+                proto = zero(cfg, 1)
+                c = jax.tree.map(
+                    lambda a: ("layers", "batch") + (None,) * (a.ndim - 1),
+                    proto)
+            slots.append(c)
+        segs.append(slots)
+    return {"segments": segs}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_pos, *,
+                cond=None, mesh=None, shard=_IDENT):
+    """One decode step.  tokens: [B,1]; cur_pos: [B] int32 (current length).
+    Returns (logits [B,1,V], new_cache)."""
+    x = L.embed(params["embed"], cfg, tokens)
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    new_segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        kinds = [parse_kind(s) for s in pattern]
+        slot_params = params["segments"][si]
+        slot_caches = cache["segments"][si]
+
+        def body(xx, per_repeat):
+            slot_ps, slot_cs = per_repeat
+            new_cs = []
+            for j, kind in enumerate(kinds):
+                xx, nc = _apply_block_decode(
+                    slot_ps[j], cfg, kind, xx, slot_cs[j], cur_pos=cur_pos,
+                    cond=cond, mesh=mesh, shard=shard)
+                new_cs.append(nc)
+            return xx, new_cs
+
+        if cfg.unroll_layers:
+            reps = []
+            for r in range(repeats):
+                per = jax.tree.map(lambda a: a[r], (slot_params, slot_caches))
+                x, ncs = body(x, per)
+                reps.append(ncs)
+            new_slot_caches = [
+                jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                             *[rep[j] for rep in reps])
+                for j in range(len(kinds))]
+        else:
+            x, new_slot_caches = jax.lax.scan(body, x,
+                                              (slot_params, slot_caches))
+        new_segs.append(new_slot_caches)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, {"segments": new_segs}
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None, cond=None,
+            mesh=None, shard=_IDENT, param_specs=None, pshard=None):
+    """Prefill: forward pass that also returns a populated cache.
+    Returns (last_logits [B,1,V], cache)."""
+    x = L.embed(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None]
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    x, caches, _ = _run_segments_seq(params, cfg, x, positions=positions,
+                                     cond=cond, mesh=mesh, shard=shard,
+                                     collect_cache=True,
+                                     param_specs=param_specs, pshard=pshard)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+
+    # Assemble the cache pytree: attention entries -> (k, v, pos); recurrent
+    # entries are already final states stacked [R, ...] by the scan.
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        kinds = [parse_kind(p_) for p_ in pattern]
+        slots = []
+        for j, kind in enumerate(kinds):
+            e = caches[si][j]
+            if kind.is_attention:
+                window = cfg.window_size if kind.base == "local" else 0
+                pos = jnp.broadcast_to(jnp.arange(s)[None, None],
+                                       (repeats, b, s)).astype(jnp.int32)
+                if window > 0 and s > window:
+                    e = jax.tree.map(lambda a: a[:, :, -window:], e)
+                    pos = pos[:, :, -window:]
+                if kind.mla:
+                    slots.append({"ckv": e["ckv"], "krope": e["krope"],
+                                  "pos": pos})
+                else:
+                    slots.append({"k": e["k"], "v": e["v"], "pos": pos})
+            else:
+                slots.append(e)
+        segs.append(slots)
+    return logits, {"segments": segs}
+
+
+def pad_cache(cache, cfg: ModelConfig, max_len: int):
+    """Pad prefill-produced attention caches out to `max_len` capacity
+    (pos entries -1 == empty).  Recurrent states pass through."""
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        slots = []
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            c = cache["segments"][si][j]
+            if kind.is_attention:
+                window = cfg.window_size if kind.base == "local" else 0
+                cap = min(window, max_len) if window > 0 else max_len
+                cur = c["pos"].shape[2]
+                if cur < cap:
+                    pad = cap - cur
+
+                    def padk(a, fill=0):
+                        w = [(0, 0)] * a.ndim
+                        w[2] = (0, pad)
+                        return jnp.pad(a, w, constant_values=fill)
+
+                    c = {k_: (padk(v, -1) if k_ == "pos" else padk(v))
+                         for k_, v in c.items()}
+            slots.append(c)
+        segs.append(slots)
+    return {"segments": segs}
+
+
+def init_specs_only(cfg: ModelConfig):
+    """Logical-axis spec tree without allocating full-size params.
+
+    The spec tree's structure depends only on the segment patterns and
+    feature flags, never on dims -- so build it from a tiny structure twin
+    of the config (same patterns/flags, toy sizes).
+    """
+    import dataclasses as _dc
+
+    from repro.models.config import MLAConfig as _MLA
+    from repro.models.config import MoEConfig as _MoE
+
+    kv = 4 if cfg.num_heads == cfg.num_kv_heads else min(4, max(
+        1, cfg.num_kv_heads))
+    twin = _dc.replace(
+        cfg,
+        d_model=64, num_heads=4, num_kv_heads=kv, head_dim=16,
+        d_ff=128 if cfg.d_ff else 0, vocab_size=64,
+        segments=tuple((pat, 1) for pat, _ in cfg.segments),
+        lru_width=32 if cfg.lru_width else 0,
+        cond_dim=64 if cfg.cond_dim else 0,
+        window_size=min(cfg.window_size, 8) if cfg.window_size else 0,
+        moe=(_MoE(num_experts=8, top_k=2, d_expert=16,
+                  num_shared=cfg.moe.num_shared,
+                  d_shared=16 if (cfg.moe and cfg.moe.d_shared) else 0)
+             if cfg.moe else None),
+        mla=(_MLA(q_lora_rank=16, kv_lora_rank=8, qk_nope_dim=8,
+                  qk_rope_dim=4, v_head_dim=8) if cfg.mla else None),
+        remat=False, moe_impl="dense",
+    )
+    return init(jax.random.PRNGKey(0), twin)[1]

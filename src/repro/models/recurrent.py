@@ -1,0 +1,340 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (RecurrentGemma).
+
+TPU adaptation notes (DESIGN.md S3):
+  * RG-LRU is a *linear* recurrence with elementwise gates, so it runs as a
+    log-depth ``jax.lax.associative_scan`` -- the TPU-native formulation
+    (the GPU reference uses a custom linear-scan kernel).
+  * mLSTM/sLSTM use exponential gating with the max-stabiliser; the
+    sequence dimension is processed with ``lax.scan`` (sequential form).
+    All cells expose a single-step path for decode.
+  * The xLSTM paper's causal conv1d(4) front of each cell is kept (cheap,
+    shift-and-add form); GroupNorm after the cell is RMS-normalised per
+    head (simplification, documented).
+
+Every state is a dict of named arrays so the serving runtime can treat
+recurrent state and KV caches uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, rms_norm, split_tree
+
+Params = Dict[str, Any]
+
+
+def _causal_conv1d(x, w):
+    """Depthwise causal conv.  x: [B,S,D], w: [K,D]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        xs = x if j == 0 else jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j or None]
+        out = out + xs * w[k - 1 - j]
+    return out
+
+
+def _conv_step(state, x_t, w):
+    """Single-token conv.  state: [B,K-1,D] (previous inputs)."""
+    k = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # [B,K,D]
+    y = jnp.einsum("bkd,kd->bd", window, w)
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dm = 2 * d                      # block up-projection
+    nh = max(1, cfg.num_kv_heads)   # xLSTM heads ride the kv_heads field
+    ks = jax.random.split(key, 8)
+    tree = {
+        "w_up": _dense_init(ks[0], (d, dm), ("embed", "mlp")),
+        "w_gate": _dense_init(ks[1], (d, dm), ("embed", "mlp")),
+        "conv": (jnp.zeros((4, dm), jnp.float32), (None, "mlp")),
+        "wq": _dense_init(ks[2], (dm, dm), ("mlp", "mlp")),
+        "wk": _dense_init(ks[3], (dm, dm), ("mlp", "mlp")),
+        "wv": _dense_init(ks[4], (dm, dm), ("mlp", "mlp")),
+        "w_if": _dense_init(ks[5], (dm, 2 * nh), ("mlp", None)),
+        "out_norm": (jnp.ones((dm,), jnp.float32), ("mlp",)),
+        "w_down": _dense_init(ks[6], (dm, d), ("mlp", "embed")),
+    }
+    return split_tree(tree)
+
+
+def mlstm_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    dm, nh = 2 * d, max(1, cfg.num_kv_heads)
+    hd = dm // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), dtype),
+        "n": jnp.zeros((batch, nh, hd), dtype),
+        "m": jnp.full((batch, nh), -1e30, dtype),
+        "conv": jnp.zeros((batch, 3, dm), dtype),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One timestep.  state: (C, n, m); q,k,v: [B,nh,hd]; i,f: [B,nh]."""
+    q, k, v, i, f = qkvif
+    C, n, m = state
+    hd = q.shape[-1]
+    k = k / np.sqrt(hd)
+    m_new = jnp.maximum(f + m, i)
+    i_p = jnp.exp(i - m_new)[..., None]
+    f_p = jnp.exp(f + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k
+    C_new = f_p[..., None] * C + i_p[..., None] * (k[..., :, None]
+                                                   * v[..., None, :])
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_inputs(p, x_in, nh):
+    """Projections shared by scan/step.  x_in: [B,S,dm] (post-conv)."""
+    b, s, dm = x_in.shape
+    hd = dm // nh
+    q = (x_in @ p["wq"].astype(x_in.dtype)).reshape(b, s, nh, hd)
+    k = (x_in @ p["wk"].astype(x_in.dtype)).reshape(b, s, nh, hd)
+    v = (x_in @ p["wv"].astype(x_in.dtype)).reshape(b, s, nh, hd)
+    gf = (x_in @ p["w_if"].astype(x_in.dtype)).astype(jnp.float32)
+    i, f = gf[..., :nh], gf[..., nh:]
+    f = jax.nn.log_sigmoid(f)     # forget gate in log space
+    return q, k, v, i, f
+
+
+def mlstm_apply(p: Params, cfg: ModelConfig, x, state=None):
+    """Sequence form.  x: [B,S,d] -> (y, final_state)."""
+    b, s, d = x.shape
+    up = x @ p["w_up"].astype(x.dtype)
+    gate = x @ p["w_gate"].astype(x.dtype)
+    if state is None:
+        state = mlstm_zero_state(cfg, b, jnp.float32)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), up], axis=1)
+    xc = jax.nn.silu(_causal_conv1d(conv_in, p["conv"].astype(x.dtype))[:, 3:])
+    nh = max(1, cfg.num_kv_heads)
+    q, k, v, i, f = _mlstm_inputs(p, xc, nh)
+
+    seq = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3),
+           i.transpose(1, 0, 2), f.transpose(1, 0, 2))
+    cell_state = (state["C"], state["n"], state["m"])
+
+    def _cell_bf16(st, t_in):
+        qt, kt, vt, it, ft = t_in
+        st2, h = _mlstm_cell(st, (qt.astype(jnp.float32),
+                                  kt.astype(jnp.float32),
+                                  vt.astype(jnp.float32), it, ft))
+        return st2, h.astype(x.dtype)
+
+    final, hs = jax.lax.scan(_cell_bf16, cell_state, seq)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, -1).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"]) * jax.nn.silu(gate)
+    y = h @ p["w_down"].astype(x.dtype)
+    new_state = {"C": final[0], "n": final[1], "m": final[2],
+                 "conv": conv_in[:, -3:].astype(jnp.float32)}
+    return y, new_state
+
+
+def mlstm_step(p: Params, cfg: ModelConfig, x, state):
+    """Decode step.  x: [B,1,d]."""
+    up = (x @ p["w_up"].astype(x.dtype))[:, 0]
+    gate = (x @ p["w_gate"].astype(x.dtype))[:, 0]
+    conv_state, xc = _conv_step(state["conv"].astype(x.dtype), up,
+                                p["conv"].astype(x.dtype))
+    xc = jax.nn.silu(xc)[:, None]
+    nh = max(1, cfg.num_kv_heads)
+    q, k, v, i, f = _mlstm_inputs(p, xc, nh)
+    cell = (state["C"], state["n"], state["m"])
+    new_st, h = _mlstm_cell(
+        cell, (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+               v[:, 0].astype(jnp.float32), i[:, 0], f[:, 0]))
+    h = h.reshape(h.shape[0], -1).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"]) * jax.nn.silu(gate)
+    y = (h @ p["w_down"].astype(x.dtype))[:, None]
+    return y, {"C": new_st[0], "n": new_st[1], "m": new_st[2],
+               "conv": conv_state.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = max(1, cfg.num_kv_heads)
+    hd = d // nh
+    ks = jax.random.split(key, 6)
+    ff = int(d * 4 / 3)
+    tree = {
+        "conv": (jnp.zeros((4, d), jnp.float32), (None, "embed")),
+        "w_gates": _dense_init(ks[0], (d, 4 * d), ("embed", "mlp")),
+        "r_gates": _dense_init(ks[1], (nh, hd, 4 * hd),
+                               ("kv_heads", None, None)),
+        "out_norm": (jnp.ones((d,), jnp.float32), ("embed",)),
+        "w_up": _dense_init(ks[2], (d, ff), ("embed", "mlp")),
+        "w_down": _dense_init(ks[3], (ff, d), ("mlp", "embed")),
+    }
+    return split_tree(tree)
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d, nh = cfg.d_model, max(1, cfg.num_kv_heads)
+    hd = d // nh
+    return {
+        "c": jnp.zeros((batch, nh, hd), dtype),
+        "n": jnp.full((batch, nh, hd), 1e-6, dtype),
+        "m": jnp.full((batch, nh, hd), -1e30, dtype),
+        "h": jnp.zeros((batch, nh, hd), dtype),
+        "conv": jnp.zeros((batch, 3, d), dtype),
+    }
+
+
+def _slstm_cell(state, wx, r_gates):
+    """wx: [B,4d] precomputed input part; recurrent part from state h."""
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    b, nh, hd = h.shape
+    rx = jnp.einsum("bhk,hkg->bhg", h, r_gates)          # [B,nh,4hd]
+    gates = wx.reshape(b, nh, 4 * hd) + rx
+    z, i, f, o = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(f + m, i)
+    i_p = jnp.exp(i - m_new)
+    f_p = jnp.exp(f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+
+def slstm_apply(p: Params, cfg: ModelConfig, x, state=None):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_zero_state(cfg, b, jnp.float32)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), x], axis=1)
+    xc = jax.nn.silu(_causal_conv1d(conv_in, p["conv"].astype(x.dtype))[:, 3:])
+    wx = xc @ p["w_gates"].astype(x.dtype)
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(st, wx_t):
+        new_st, h = _slstm_cell(st, wx_t.astype(jnp.float32), r)
+        return new_st, h.astype(x.dtype)
+
+    cell = {k: state[k] for k in ("c", "n", "m", "h")}
+    final, hs = jax.lax.scan(step, cell, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    y = jax.nn.gelu(h @ p["w_up"].astype(x.dtype)) @ p["w_down"].astype(x.dtype)
+    new_state = dict(final, conv=conv_in[:, -3:].astype(jnp.float32))
+    return y, new_state
+
+
+def slstm_step(p: Params, cfg: ModelConfig, x, state):
+    conv_state, xc = _conv_step(state["conv"].astype(x.dtype), x[:, 0],
+                                p["conv"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    wx = (xc @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+    cell = {k: state[k] for k in ("c", "n", "m", "h")}
+    new_st, h = _slstm_cell(cell, wx, p["r_gates"].astype(jnp.float32))
+    b = x.shape[0]
+    h = h.reshape(b, -1).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    y = (jax.nn.gelu(h @ p["w_up"].astype(x.dtype))
+         @ p["w_down"].astype(x.dtype))[:, None]
+    return y, dict(new_st, conv=conv_state.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) is in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    tree = {
+        "w_x": _dense_init(ks[1], (d, w), ("embed", "lru")),
+        "w_gate": _dense_init(ks[2], (d, w), ("embed", "lru")),
+        "conv": (jnp.zeros((4, w), jnp.float32), (None, "lru")),
+        "lam": (lam, ("lru",)),
+        "w_a": _dense_init(ks[3], (w, w // 8), ("lru", None)),
+        "w_a2": _dense_init(ks[4], (w // 8, w), (None, "lru")),
+        "w_i": _dense_init(ks[5], (w, w // 8), ("lru", None)),
+        "w_i2": _dense_init(jax.random.fold_in(key, 9), (w // 8, w),
+                            (None, "lru")),
+        "w_out": _dense_init(jax.random.fold_in(key, 10), (w, d),
+                             ("lru", "embed")),
+    }
+    return split_tree(tree)
+
+
+def rglru_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), dtype),
+            "conv": jnp.zeros((batch, 3, w), dtype)}
+
+
+def _rglru_gates(p, xc):
+    """a (log-space) and gated input for each position.  xc: [..., w]."""
+    r = jax.nn.sigmoid((xc @ p["w_a"].astype(xc.dtype))
+                       @ p["w_a2"].astype(xc.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid((xc @ p["w_i"].astype(xc.dtype))
+                       @ p["w_i2"].astype(xc.dtype)).astype(jnp.float32)
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = beta * (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(p: Params, cfg: ModelConfig, x, state=None):
+    """x: [B,S,d] -> (y, state).  Associative scan over the linear
+    recurrence h_t = a_t*h_{t-1} + b_t (TPU-native log-depth form)."""
+    bsz, s, d = x.shape
+    if state is None:
+        state = rglru_zero_state(cfg, bsz, jnp.float32)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_x"].astype(x.dtype)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), u], axis=1)
+    xc = _causal_conv1d(conv_in, p["conv"].astype(x.dtype))[:, 3:]
+    a, b = _rglru_gates(p, xc)
+    # fold previous state into the first step
+    b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    new_state = {"h": h[:, -1], "conv": conv_in[:, -3:].astype(jnp.float32)}
+    return y, new_state
+
+
+def rglru_step(p: Params, cfg: ModelConfig, x, state):
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"].astype(x.dtype))
+    u = x[:, 0] @ p["w_x"].astype(x.dtype)
+    conv_state, xc = _conv_step(state["conv"].astype(x.dtype), u,
+                                p["conv"].astype(x.dtype))
+    a, b = _rglru_gates(p, xc)
+    h = a * state["h"] + b
+    y = ((h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype))[:, None]
+    return y, {"h": h, "conv": conv_state.astype(jnp.float32)}

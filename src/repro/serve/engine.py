@@ -1,0 +1,146 @@
+"""Serving engine: batched prefill + decode generation with an attention
+monitor feeding the tiering runtime.
+
+``generate`` is the plain path (greedy/temperature sampling over
+``model.decode_step``).  ``monitored_generate`` additionally recomputes the
+attention distribution of one designated layer per step (the "accessed
+bits" of the KV-tiering scheduler -- sampling one layer is the cheap,
+realistic monitor) and returns the per-page attention-mass sequence that
+``repro.memtier`` consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import model as mdl
+from repro.models.config import ModelConfig, parse_kind
+
+__all__ = ["generate", "monitored_generate", "page_mass_from_attention"]
+
+
+def _sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key / 1, logits / temperature, axis=-1)
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens, steps: int, *,
+             max_len: Optional[int] = None, temperature: float = 0.0,
+             cond=None, extra_embeds=None, key=None, mesh=None):
+    """Greedy/temperature generation.  prompt_tokens: [B, P_len] int32.
+    Returns tokens [B, steps]."""
+    b, plen = prompt_tokens.shape
+    prefix = cfg.prefix_len or 0
+    max_len = max_len or (plen + prefix + steps)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    logits, cache = mdl.prefill(params, cfg, prompt_tokens, cond=cond,
+                                extra_embeds=extra_embeds, mesh=mesh)
+    cache = mdl.pad_cache(cache, cfg, max_len)
+    pos = jnp.full((b,), prefix + plen, jnp.int32)
+    tok = _sample(logits[:, 0], key, temperature)[:, None]
+    out = [tok]
+
+    step_fn = jax.jit(lambda c, t, p: mdl.decode_step(
+        params, cfg, c, t, p, cond=cond, mesh=mesh))
+    for i in range(steps - 1):
+        logits, cache = step_fn(cache, tok, pos)
+        key = jax.random.fold_in(key, i)
+        tok = _sample(logits[:, 0], key, temperature)[:, None]
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)
+
+
+def _monitor_slot(cfg: ModelConfig) -> Tuple[int, int]:
+    """Pick the deepest full-attention slot as the monitor layer."""
+    best = None
+    for si, (pattern, _) in enumerate(cfg.segments):
+        for j, ks in enumerate(pattern):
+            kind = parse_kind(ks)
+            if kind.base == "attn" and not kind.mla:
+                best = (si, j)
+    if best is None:
+        raise ValueError("no full-attention layer to monitor "
+                         f"in {cfg.name} (attention-free arch)")
+    return best
+
+
+def page_mass_from_attention(q, k, cache_pos, cur_pos, page_size: int,
+                             n_pages: int, theta: float):
+    """Attention-probability mass per KV page for the monitor layer.
+    q/k: [B,1|T,KV_or_H,D]; returns f32[n_pages] (max over batch)."""
+    d = q.shape[-1]
+    rep = q.shape[2] // k.shape[2]
+    kr = jnp.repeat(k, rep, axis=2)
+    logits = jnp.einsum("bqhd,bthd->bhqt", q, kr).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    valid = (cache_pos <= cur_pos[:, None]) & (cache_pos >= 0)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)           # [B,H,1,T]
+    mass_tok = w.sum(axis=(1, 2))                 # [B,T]
+    t = mass_tok.shape[1]
+    pad = (-t) % page_size
+    if pad:
+        mass_tok = jnp.pad(mass_tok, ((0, 0), (0, pad)))
+        cache_pos = jnp.pad(cache_pos, ((0, 0), (0, pad)),
+                            constant_values=-1)
+    # map cache slots -> logical pages by stored absolute position
+    page_of = jnp.where(cache_pos >= 0, cache_pos // page_size, n_pages)
+    mass = jnp.zeros((mass_tok.shape[0], n_pages + 1), jnp.float32)
+    mass = mass.at[jnp.arange(mass.shape[0])[:, None], page_of].add(mass_tok)
+    return mass[:, :n_pages].max(axis=0)
+
+
+def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
+                       *, page_size: int = 16, temperature: float = 0.0,
+                       cond=None, extra_embeds=None, key=None):
+    """generate() + per-step page-mass monitoring of one attention layer.
+    Returns (tokens [B,steps], page_mass [steps, n_pages])."""
+    b, plen = prompt_tokens.shape
+    prefix = cfg.prefix_len or 0
+    max_len = plen + prefix + steps
+    n_pages = -(-max_len // page_size)
+    si, sj = _monitor_slot(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    logits, cache = mdl.prefill(params, cfg, prompt_tokens, cond=cond,
+                                extra_embeds=extra_embeds)
+    cache = mdl.pad_cache(cache, cfg, max_len)
+    pos = jnp.full((b,), prefix + plen, jnp.int32)
+    tok = _sample(logits[:, 0], key, temperature)[:, None]
+    out, masses = [tok], []
+
+    # monitor params of the LAST repeat of the chosen slot
+    slot_p = jax.tree.map(lambda a: a[-1],
+                          params["segments"][si][sj])
+
+    def monitor(cache, tok, pos):
+        c = cache["segments"][si][sj]
+        k = c["k"][-1]                          # [B,T,KV,D]
+        x = L.embed(params["embed"], cfg, tok)
+        h = L.rms_norm(x, slot_p["norm1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, slot_p["attn"]["wq"].astype(h.dtype))
+        if cfg.qk_norm:
+            q = L.rms_norm(q, slot_p["attn"]["q_norm"])
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        return page_mass_from_attention(q, k, c["pos"][-1], pos, page_size,
+                                        n_pages, cfg.rope_theta)
+
+    step_fn = jax.jit(lambda c, t, p: mdl.decode_step(params, cfg, c, t, p,
+                                                      cond=cond))
+    mon_fn = jax.jit(monitor)
+    for i in range(steps - 1):
+        masses.append(np.asarray(mon_fn(cache, tok, pos)))
+        logits, cache = step_fn(cache, tok, pos)
+        key = jax.random.fold_in(key, i)
+        tok = _sample(logits[:, 0], key, temperature)[:, None]
+        out.append(tok)
+        pos = pos + 1
+    return (jnp.concatenate(out, axis=1),
+            np.stack(masses) if masses else np.zeros((0, n_pages)))

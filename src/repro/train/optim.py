@@ -1,0 +1,180 @@
+"""AdamW with configurable state precision (fp32 / bf16 / int8-blockwise).
+
+State-precision ladder (distributed-optimization trick for the 340B/671B
+configs -- see EXPERIMENTS.md memory table):
+    fp32: 8 bytes/param of optimizer state
+    bf16: 4 bytes/param
+    int8: ~2.06 bytes/param (blockwise 128 with fp32 scales, error kept by
+          re-quantising after each update; same recipe as 8-bit Adam)
+
+Pure-pytree implementation (no optax dependency in the container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"       # float32 | bfloat16 | int8
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantisation
+# ---------------------------------------------------------------------------
+
+
+class _QLeaf(NamedTuple):
+    """Pytree-registered quantised leaf (blockwise int8).
+
+    Linear mode (signed data, e.g. Adam m):  x ~ q * scale,        zero == 0
+    Log mode (positive data, e.g. Adam v):   x ~ exp(zero + (q+127)*scale)
+    Log-domain quantisation is essential for v: linear int8 zeroes small
+    second moments within a block and the update m/sqrt(v) explodes."""
+    q: jnp.ndarray      # int8 [nblocks, QBLOCK]
+    scale: jnp.ndarray  # f32  [nblocks, 1]
+    zero: jnp.ndarray   # f32  [nblocks, 1]
+
+
+def _blocks(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+
+
+def _quantize_linear(x) -> _QLeaf:
+    b = _blocks(x)
+    scale = jnp.maximum(jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    return _QLeaf(q, scale.astype(jnp.float32),
+                  jnp.zeros_like(scale, jnp.float32))
+
+
+def _quantize_log(x) -> _QLeaf:
+    lx = jnp.log(_blocks(x) + 1e-30)
+    lo = jnp.min(lx, axis=1, keepdims=True)
+    hi = jnp.max(lx, axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 254.0, 1e-8)
+    q = jnp.clip(jnp.round((lx - lo) / scale) - 127, -127, 127).astype(jnp.int8)
+    return _QLeaf(q, scale.astype(jnp.float32), lo.astype(jnp.float32))
+
+
+def _pack(x: jnp.ndarray, dtype: str, mode: str = "linear"):
+    if dtype == "int8":
+        return (_quantize_log(x) if mode == "log" else _quantize_linear(x))
+    return x.astype(jnp.dtype(dtype))
+
+
+def _unpack(leaf, shape, dtype: str, mode: str = "linear") -> jnp.ndarray:
+    if dtype == "int8":
+        n = int(np.prod(shape))
+        if mode == "log":
+            flat = jnp.exp(leaf.zero
+                           + (leaf.q.astype(jnp.float32) + 127.0)
+                           * leaf.scale).reshape(-1)
+            flat = jnp.where(flat <= 2e-30, 0.0, flat)
+        else:
+            flat = (leaf.q.astype(jnp.float32) * leaf.scale).reshape(-1)
+        return flat[:n].reshape(shape)
+    return leaf.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params, cfg: OptConfig):
+    m0 = jax.tree.map(lambda p: _pack(jnp.zeros_like(p, jnp.float32),
+                                      cfg.state_dtype, "linear"), params)
+    v0 = jax.tree.map(lambda p: _pack(jnp.zeros_like(p, jnp.float32),
+                                      cfg.state_dtype, "log"), params)
+    return {"m": m0, "v": v0, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(grads, state, params, cfg: OptConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, state["count"])
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    is_q = lambda x: isinstance(x, _QLeaf)
+
+    def one(p, g, m_leaf, v_leaf):
+        g = g.astype(jnp.float32) * clip
+        m = _unpack(m_leaf, p.shape, cfg.state_dtype, "linear")
+        v = _unpack(v_leaf, p.shape, cfg.state_dtype, "log")
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (upd + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        return (new_p.astype(p.dtype), _pack(m, cfg.state_dtype, "linear"),
+                _pack(v, cfg.state_dtype, "log"))
+
+    # explicit flatten: quantised m/v leaves are themselves pytrees, so a
+    # single tree.map over `params` would see a structure mismatch.
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+    v_leaves = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+    outs = [one(p, g, m, v) for p, g, m, v in
+            zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_state = {"m": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+                 "v": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+                 "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(param_specs, cfg: OptConfig):
+    """Logical-axis spec tree for the optimizer state.  fp32/bf16 states
+    mirror the param specs; int8 leaves are blockwise-flat [nblocks, 128]
+    and shard their block dim over "data" when divisible ("qblocks")."""
+    is_axes = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x))
+    if cfg.state_dtype == "int8":
+        wrap = lambda ax: _QLeaf(("qblocks", None), ("qblocks", None),
+                                 ("qblocks", None))
+    else:
+        wrap = lambda ax: ax
+    m = jax.tree.map(wrap, param_specs, is_leaf=is_axes)
+    return {"m": m, "v": m, "count": None}

@@ -1,0 +1,107 @@
+"""Cori frequency generator + tuner: Eq. 1 / Eq. 2 math and tuning logic."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ReuseHistogram, Tuner, candidate_periods,
+                        dominant_reuse, loop_duration_histogram,
+                        ordered_candidates, trials_to_best)
+
+
+def _hist(values, counts, width=1000):
+    return ReuseHistogram(np.asarray(values, float), np.asarray(counts, float),
+                          width)
+
+
+def test_dominant_reuse_single_bin():
+    assert dominant_reuse(_hist([20000], [15])) == 20000
+
+
+def test_dominant_reuse_eq1_hand_computed():
+    # reuses [1000, 3000], repeats [10, 5], N=2 -> weights (N-i): [1, 0]
+    # DR = (1*10*1000 + 0*5*3000) / (1*10 + 0) = 1000
+    assert dominant_reuse(_hist([1000, 3000], [10, 5])) == 1000.0
+    # Three bins: weights [2,1,0]
+    # DR = (2*4*100 + 1*2*500 + 0) / (2*4 + 1*2) = (800+1000)/10 = 180
+    assert dominant_reuse(_hist([100, 500, 900], [4, 2, 7])) == 180.0
+
+
+def test_dominant_reuse_favours_short():
+    """The (N-i) weight shifts DR towards short reuses: DR must be below the
+    plain repeat-weighted mean whenever >1 bin exists."""
+    h = _hist([1000, 2000, 8000], [5, 5, 5])
+    plain = np.average(h.values, weights=h.counts)
+    assert dominant_reuse(h) < plain
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(1, 1e6), st.integers(1, 1000)),
+                min_size=1, max_size=20, unique_by=lambda t: t[0]))
+def test_dominant_reuse_bounded(pairs):
+    values = np.array([p[0] for p in pairs])
+    counts = np.array([p[1] for p in pairs], float)
+    dr = dominant_reuse(_hist(values, counts))
+    lo, hi = values.min(), values.max()
+    tol = 1e-9 * max(1.0, hi)
+    assert lo - tol <= dr <= hi + tol
+
+
+def test_candidate_periods_eq2():
+    c = candidate_periods(dr=1000.0, runtime=10000.0)
+    np.testing.assert_allclose(c, [1000, 2000, 3000, 4000, 5000])
+    # shortest (highest frequency) first
+    assert (np.diff(c) > 0).all()
+
+
+def test_candidate_periods_dr_above_half_runtime():
+    c = candidate_periods(dr=8000.0, runtime=10000.0)
+    np.testing.assert_allclose(c, [5000.0])
+
+
+def test_candidate_periods_thinned_tail_keeps_endpoints():
+    c = candidate_periods(dr=10.0, runtime=100000.0, max_candidates=16)
+    assert len(c) <= 16
+    assert c[0] == 10.0
+    assert c[-1] <= 50000.0
+    assert (np.diff(c) > 0).all()
+
+
+def test_tuner_stops_on_no_improvement():
+    # runtime curve: improves until 3, then worsens -> stop after patience=2
+    curve = {1.0: 100, 2.0: 80, 3.0: 60, 4.0: 65, 5.0: 70, 6.0: 40}
+    tuner = Tuner(lambda p: curve[p], patience=2)
+    res = tuner.run([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    assert res.chosen_period == 3.0
+    assert res.trials == 5  # never reaches the 6.0 decoy
+
+
+def test_tuner_max_trials():
+    tuner = Tuner(lambda p: 1.0 / p, max_trials=3)
+    res = tuner.run([1, 2, 3, 4, 5])
+    assert res.trials == 3
+
+
+def test_trials_to_best():
+    assert trials_to_best([5, 4, 3, 3.004, 7]) == 3
+    assert trials_to_best([1.0]) == 1
+    assert trials_to_best([2.0, 1.0]) == 2
+
+
+def test_ordered_candidates():
+    right = ordered_candidates(1000, 100, "base-right")
+    left = ordered_candidates(1000, 100, "base-left")
+    assert right[0] == 100 and right[-1] == 500
+    np.testing.assert_array_equal(left, right[::-1])
+    rnd = ordered_candidates(1000, 100, "base-random", seed=0)
+    assert sorted(rnd.tolist()) == sorted(right.tolist())
+
+
+def test_loop_duration_proxy_matches_trace_histogram():
+    """SIV-A: loop durations approximate the reuse-distance histogram.  For
+    backprop both collectors must give a DR within the same periodic band."""
+    from repro.core import generate, reuse_distance_histogram
+    tr = generate("backprop")
+    dr_trace = dominant_reuse(reuse_distance_histogram(tr.pages, 1000))
+    dr_loops = dominant_reuse(loop_duration_histogram(tr.loop_durations, 1000))
+    assert abs(dr_trace - dr_loops) / dr_trace < 0.15

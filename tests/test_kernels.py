@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# page_hist
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_pages,tile_accesses", [(512, 100), (1024, 1000),
+                                                     (2048, 4096)])
+def test_page_hist_matches_ref(num_pages, tile_accesses):
+    key = jax.random.PRNGKey(num_pages)
+    ids = jax.random.randint(key, (tile_accesses,), 0, num_pages, jnp.int32)
+    hot = jax.random.uniform(jax.random.PRNGKey(1), (num_pages,)) * 3
+    for alpha, thr in [(0.5, 1.0), (0.9, 0.5)]:
+        c1, h1, m1 = ops.page_hist(ids, hot, alpha=alpha, threshold=thr,
+                                   impl="interpret")
+        c2, h2, m2 = ref.page_hist_ref(ids, hot, alpha=alpha, threshold=thr)
+        np.testing.assert_allclose(c1, c2, atol=1e-6)
+        np.testing.assert_allclose(h1, h2, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_page_hist_padding_ignored():
+    ids = jnp.array([3, 3, -1, -1, 7], jnp.int32)
+    hot = jnp.zeros((512,))
+    c, h, m = ops.page_hist(ids, hot, impl="interpret")
+    assert float(c[3]) == 2.0 and float(c[7]) == 1.0
+    assert float(c.sum()) == 3.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_page_hist_property(seed):
+    rng = np.random.default_rng(seed)
+    num_pages = 512
+    n = int(rng.integers(10, 400))
+    ids = jnp.asarray(rng.integers(0, num_pages, n), jnp.int32)
+    hot = jnp.asarray(rng.random(num_pages), jnp.float32)
+    c, h, m = ops.page_hist(ids, hot, impl="interpret")
+    assert float(c.sum()) == n                       # counts conserve accesses
+    c2, h2, m2 = ref.page_hist_ref(ids, hot)
+    np.testing.assert_allclose(c, c2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kv,d", [(256, 4, 4, 64), (512, 4, 2, 64),
+                                      (256, 8, 1, 128)])
+def test_flash_attention_matches_ref(s, h, kv, d, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, s, h, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, kv, d), dtype)
+    o = ops.flash_attention(q, k, v, bq=128, bkv=128, impl="interpret")
+    r = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_flash_attention_sliding_window():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 256, 4, 64))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 256, 4, 64))
+    o = ops.flash_attention(q, k, v, window=64, bq=64, bkv=64,
+                            impl="interpret")
+    r = ref.flash_attention_ref(q, k, v, window=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q = jax.random.normal(jax.random.PRNGKey(6), (1, 128, 2, 64))
+    k = jax.random.normal(jax.random.PRNGKey(7), (1, 128, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(8), (1, 128, 2, 64))
+    o = ops.flash_attention(q, k, v, causal=False, bq=64, bkv=64,
+                            impl="interpret")
+    r = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,kv,d,page", [(4, 4, 64, 16), (8, 2, 64, 32),
+                                         (8, 1, 128, 16)])
+def test_paged_attention_matches_ref(h, kv, d, page, dtype):
+    b, n_pages, p_phys = 3, 8, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, d), dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (p_phys, page, kv, d), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (p_phys, page, kv, d), dtype)
+    pt = jax.random.permutation(
+        jax.random.PRNGKey(3), p_phys)[: b * n_pages].reshape(b, n_pages)
+    lengths = jnp.array([n_pages * page, n_pages * page - 7, page + 3],
+                        jnp.int32)
+    o = ops.paged_attention(q, kp, vp, pt, lengths, impl="interpret")
+    r = ref.paged_attention_ref(q, kp, vp, pt, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_paged_attention_page_permutation_invariance():
+    """Physically permuting pages (with the table updated) cannot change the
+    output -- the invariant the tiering runtime relies on when it migrates
+    pages between tiers."""
+    b, h, kv, d, page, n_pages, p_phys = 2, 4, 2, 64, 16, 4, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    kp = jax.random.normal(jax.random.PRNGKey(1), (p_phys, page, kv, d))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (p_phys, page, kv, d))
+    pt = jnp.arange(b * n_pages, dtype=jnp.int32).reshape(b, n_pages)
+    lengths = jnp.full((b,), n_pages * page, jnp.int32)
+    o1 = ops.paged_attention(q, kp, vp, pt, lengths, impl="interpret")
+    perm = jax.random.permutation(jax.random.PRNGKey(3), p_phys)
+    inv = jnp.argsort(perm)
+    o2 = ops.paged_attention(q, kp[perm], vp[perm], inv[pt], lengths,
+                             impl="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

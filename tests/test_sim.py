@@ -1,0 +1,103 @@
+"""Hybrid-memory simulator: JAX scan vs pure-python oracle + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (SimConfig, Trace, bin_trace, generate, simulate,
+                        simulate_reference)
+
+
+def _small_trace(seed=0):
+    return generate("backprop", seed=seed, num_pages=256, sweeps=6,
+                    accesses_per_page=3)
+
+
+@pytest.mark.parametrize("scheduler", ["reactive", "predictive"])
+@pytest.mark.parametrize("period", [100, 700, 2300])
+def test_scan_matches_reference(scheduler, period):
+    bins = bin_trace(_small_trace())
+    a = simulate(bins, period, scheduler)
+    b = simulate_reference(bins, period, scheduler)
+    assert a.migrations == b.migrations
+    assert a.fast_hits == b.fast_hits
+    np.testing.assert_allclose(a.runtime, b.runtime, rtol=1e-5)
+
+
+def test_runtime_lower_bound():
+    """Runtime can never beat every access hitting fast memory."""
+    bins = bin_trace(_small_trace())
+    for p in [100, 1000, 3000]:
+        r = simulate(bins, p, "predictive")
+        assert r.runtime >= r.num_accesses * SimConfig().lat_fast
+
+
+def test_predictive_beats_reactive_on_strides():
+    """Oracle knowledge of the next period can only help on a strided
+    pattern (paper SIII-C: reactive breaks the reuse)."""
+    bins = bin_trace(_small_trace())
+    p = 1000
+    pred = simulate(bins, p, "predictive")
+    reac = simulate(bins, p, "reactive")
+    assert pred.runtime <= reac.runtime
+
+
+def test_short_period_overhead_dominates():
+    """Very short periods reveal monitoring+movement overheads (SIII-C)."""
+    bins = bin_trace(_small_trace())
+    shortest = simulate(bins, 100, "reactive")
+    mid = simulate(bins, 2000, "reactive")
+    assert shortest.runtime > mid.runtime
+
+
+def test_fast_hits_bounded_by_capacity_share():
+    """With uniform sweeps, hitrate can't exceed 1.0; data moved is capped
+    by capacity per period."""
+    cfg = SimConfig()
+    bins = bin_trace(_small_trace())
+    r = simulate(bins, 500, "reactive", cfg)
+    assert 0.0 <= r.fast_hitrate <= 1.0
+    capacity = cfg.fast_capacity(bins.num_pages)
+    num_periods = -(-bins.num_accesses // 500)
+    assert r.migrations <= capacity * num_periods
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_random_traces(data):
+    """Invariants over random traces: scan==oracle, bounded hitrate,
+    nonnegative overhead decomposition."""
+    n_pages = data.draw(st.integers(8, 64))
+    n = data.draw(st.integers(200, 2000))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, n_pages, size=n).astype(np.int32)
+    tr = Trace("rand", pages, n_pages, np.array([n]))
+    bins = bin_trace(tr, block=50)
+    period = data.draw(st.sampled_from([50, 100, 250]))
+    sched = data.draw(st.sampled_from(["reactive", "predictive"]))
+    a = simulate(bins, period, sched)
+    b = simulate_reference(bins, period, sched)
+    np.testing.assert_allclose(a.runtime, b.runtime, rtol=1e-4)
+    assert a.migrations == b.migrations
+    assert 0.0 <= a.fast_hitrate <= 1.0
+    assert a.runtime >= n * 1.0
+
+
+def test_capacity_respected_in_placement():
+    """The simulator never claims more fast hits than a 100% hitrate and the
+    reference's fast set is exactly the configured capacity."""
+    tr = _small_trace()
+    bins = bin_trace(tr)
+    cfg = SimConfig(fast_frac=0.5)
+    r = simulate(bins, 1000, "predictive", cfg)
+    assert r.fast_hits <= r.num_accesses
+    assert r.fast_hitrate > 0.3  # 50% capacity must produce real hits
+
+
+def test_period_snapping():
+    bins = bin_trace(_small_trace())
+    r = simulate(bins, 149, "reactive")
+    assert r.period_requests == 100
+    r = simulate(bins, 151, "reactive")
+    assert r.period_requests == 200

@@ -1,0 +1,189 @@
+"""Data pipeline / checkpointing / fault-tolerance / optimizer tests."""
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, DataPipeline, batch_at
+from repro.ft.monitor import StepTimer
+from repro.train import optim as O
+from repro.train import step as S
+
+CFG = C.reduced("stablelm-12b")
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_elastic():
+    """Batch i is identical regardless of shard count (elastic resharding)."""
+    dcfg = DataConfig(seed=3, global_batch=8, seq_len=32)
+    full = batch_at(dcfg, CFG, index=5)
+    halves = [batch_at(dcfg, CFG, index=5, shard=s, num_shards=2)
+              for s in (0, 1)]
+    np.testing.assert_array_equal(
+        full["tokens"], np.concatenate([h["tokens"] for h in halves]))
+    # deterministic across calls
+    again = batch_at(dcfg, CFG, index=5)
+    np.testing.assert_array_equal(full["tokens"], again["tokens"])
+
+
+def test_data_targets_are_shifted():
+    dcfg = DataConfig(seed=0, global_batch=2, seq_len=16)
+    b = batch_at(dcfg, CFG, 0)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+    assert (b["targets"][:, -1] == -1).all()
+
+
+def test_pipeline_prefetch_matches_pure():
+    dcfg = DataConfig(seed=1, global_batch=2, seq_len=16, prefetch=2)
+    pipe = DataPipeline(dcfg, CFG)
+    try:
+        got = [next(pipe) for _ in range(3)]
+    finally:
+        pipe.close()
+    for i, b in enumerate(got):
+        np.testing.assert_array_equal(b["tokens"],
+                                      batch_at(dcfg, CFG, i)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ocfg = O.OptConfig()
+    state, _ = S.init_state(jax.random.PRNGKey(0), CFG, ocfg)
+    ckpt.save(tmp_path, 7, state)
+    assert ckpt.latest_step(tmp_path) == 7
+    state2, _ = S.init_state(jax.random.PRNGKey(1), CFG, ocfg)  # different
+    restored = ckpt.restore(tmp_path, 7, state2)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    state = {"a": jnp.arange(4)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(tmp_path, s, state, keep=2)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4]
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(AssertionError, match="incompatible"):
+        ckpt.restore(tmp_path, 1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_quantized_state_checkpoint_roundtrip(tmp_path):
+    ocfg = O.OptConfig(state_dtype="int8")
+    state, _ = S.init_state(jax.random.PRNGKey(0), CFG, ocfg)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "targets": jnp.zeros((2, 8), jnp.int32)}
+    state, _ = jax.jit(S.make_train_step(CFG, ocfg))(state, batch)
+    ckpt.save(tmp_path, 1, state)
+    restored = ckpt.restore(tmp_path, 1, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_state_dtypes_converge(dtype):
+    """All state precisions reduce loss on an overfittable batch; bf16/int8
+    track fp32 closely."""
+    ocfg = O.OptConfig(lr=2e-3, state_dtype=dtype, warmup_steps=2,
+                       decay_steps=50)
+    state, _ = S.init_state(jax.random.PRNGKey(0), CFG, ocfg)
+    dcfg = DataConfig(seed=0, global_batch=4, seq_len=32)
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, CFG, 0).items()}
+    fn = jax.jit(S.make_train_step(CFG, ocfg))
+    losses = []
+    for _ in range(10):
+        state, m = fn(state, batch)
+        losses.append(float(m["loss"]))
+    # int8 states carry quantisation noise early on; require clear progress
+    # for exact states, directional progress for quantised ones.
+    drop = 0.05 if dtype == "int8" else 0.2
+    assert losses[-1] < losses[0] - drop, losses
+
+
+def test_quantize_dequantize_error_bounded():
+    from repro.train.optim import _pack, _unpack
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    q = _pack(x, "int8")
+    y = _unpack(q, x.shape, "int8")
+    err = float(jnp.abs(x - y).max())
+    assert err <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+
+def test_lr_schedule_shape():
+    ocfg = O.OptConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                       min_lr_frac=0.1)
+    lrs = [float(O.schedule(ocfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100, 200]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup
+    assert lrs[2] >= lrs[3] >= lrs[4]        # decay
+    assert abs(lrs[-1] - 0.1) < 1e-6         # floor
+
+
+def test_grad_clip_caps_update_norm():
+    ocfg = O.OptConfig(lr=1e-2, grad_clip=0.5)
+    params = {"w": jnp.zeros((10,))}
+    st = O.init(params, ocfg)
+    huge = {"w": jnp.full((10,), 1e6)}
+    _, _, m = O.update(huge, st, params, ocfg)
+    assert float(m["grad_norm"]) > 1e6  # reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_step_timer_detects_straggler():
+    t = StepTimer(threshold=2.5, warmup=2)
+    for i in range(6):
+        t.start()
+        time.sleep(0.01 if i != 4 else 0.08)
+        t.stop(i)
+    assert 4 in t.stragglers
+
+
+def test_supervised_restart_resumes_training(tmp_path):
+    """Injected crash -> supervisor restart -> resume from checkpoint ->
+    run completes with exactly one restart (node-failure drill)."""
+    from repro.ft.supervisor import SupervisorConfig, supervise
+    env = dict(os.environ, PYTHONPATH="src", REPRO_FAIL_AT_STEP="8")
+    metrics = tmp_path / "m.json"
+    rep = supervise(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmoe-1b-7b",
+         "--reduced", "--steps", "12", "--batch", "2", "--seq", "16",
+         "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+         "--metrics-out", str(metrics)],
+        workdir=tmp_path, cfg=SupervisorConfig(max_restarts=2), env=env)
+    assert rep.exit_code == 0
+    assert rep.restarts == 1
+    rpt = json.loads(metrics.read_text())
+    assert rpt["start"] == 8          # resumed from the step-8 checkpoint
+    assert rpt["steps_run"] == 4

@@ -1,0 +1,64 @@
+"""Trace generators: determinism, shape and published reuse structure."""
+import numpy as np
+import pytest
+
+from repro.core import (available_traces, generate, reuse_distance_histogram,
+                        reuse_distances)
+
+
+@pytest.mark.parametrize("name", available_traces())
+def test_generator_basic(name):
+    tr = generate(name, seed=3)
+    assert tr.pages.dtype == np.int32
+    assert tr.num_accesses > 1000
+    assert tr.pages.min() >= 0
+    assert tr.pages.max() < tr.num_pages
+    assert tr.loop_durations.sum() <= tr.num_accesses
+    assert (tr.loop_durations > 0).all()
+
+
+@pytest.mark.parametrize("name", available_traces())
+def test_generator_deterministic(name):
+    a = generate(name, seed=7)
+    b = generate(name, seed=7)
+    np.testing.assert_array_equal(a.pages, b.pages)
+    np.testing.assert_array_equal(a.loop_durations, b.loop_durations)
+
+
+def test_backprop_paper_reuse_structure():
+    """Paper Fig. 3: backprop's dominant reuse distance equals the sweep
+    length (~20k requests at paper scale) and appears (sweeps-1) times per
+    page."""
+    tr = generate("backprop")  # 16 sweeps over 4096 pages x 5 accesses
+    hist = reuse_distance_histogram(tr.pages, bin_width=1000)
+    assert hist.num_bins == 1
+    sweep_len = tr.num_accesses / 16
+    assert abs(hist.values[0] - sweep_len) < 1000
+    # 15 appearances per page (16 strides) -> 15 * num_pages total.
+    assert hist.counts[0] == 15 * tr.num_pages
+
+
+def test_lud_decreasing_appearances():
+    """Paper Fig. 3: triangular traversal -> appearance counts decrease with
+    reuse distance."""
+    tr = generate("lud")
+    hist = reuse_distance_histogram(tr.pages, bin_width=1000)
+    assert hist.num_bins >= 3
+    order = np.argsort(hist.values)
+    counts = hist.counts[order]
+    # Broad trend: first half of distances has more appearances than last.
+    half = counts.shape[0] // 2
+    assert counts[:half].sum() > counts[half:].sum()
+
+
+def test_reuse_distances_simple():
+    # pages:  0 1 0 1 1  -> page0: gap=1 (one other access between)
+    d = reuse_distances(np.array([0, 1, 0, 1, 1]))
+    assert sorted(d.tolist()) == [0, 1, 1]
+
+
+def test_kmeans_has_short_and_long_reuse():
+    tr = generate("kmeans", num_pages=1024, iters=6)
+    d = reuse_distances(tr.pages)
+    assert (d < 100).sum() > 100       # hot centroid pages
+    assert (d > 1000).sum() > 100      # sweep-length reuse
