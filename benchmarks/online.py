@@ -1,0 +1,102 @@
+"""Online-Cori benchmark: closed-loop tuning on a phase-shifted workload.
+
+The serving mix flips mid-run from zipf random retrieval (best served by a
+long tiering period) to a drifting attention-sink pattern (best served by a
+very short one).  Reports, for the online tuner vs the offline
+tune-once-on-phase-A Cori and the fixed-period ladder:
+
+  * time-to-converge (decode steps until the last HOLD was entered),
+  * total modeled time over the whole run,
+  * steady-state per-step cost over the final window (the paper-style
+    "did you end up at the right frequency" metric).
+
+    PYTHONPATH=src python -m benchmarks.online
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.memtier import TierConfig, cori_tune_period, online_replay, replay
+from repro.memtier import workload as W
+
+CFG = TierConfig(hbm_pages=16, period_steps=8)
+FIXED = (1, 2, 4, 8, 16, 32, 64, 200)
+STEADY_WINDOW = 100
+
+
+def _total_and_window(wl: np.ndarray, period: int, lo: int
+                      ) -> "tuple[float, float]":
+    """(total cost, per-step cost over [lo, end)) of a fixed-period replay.
+    One full run plus one prefix run -- the replay is deterministic, so the
+    window cost is an exact prefix difference."""
+    cfg = dataclasses.replace(CFG, period_steps=period)
+    total = replay(wl, cfg).modeled_time
+    head = replay(wl[:lo], cfg).modeled_time
+    return total, (total - head) / (wl.shape[0] - lo)
+
+
+def run(quick: bool = False):
+    phase = 300 if quick else 600
+    n = 64
+    wl = np.concatenate([W.random_lookup(phase, n, seed=0),
+                         W.attention_sink(phase, n, seed=1, drift_every=1)])
+    steps = wl.shape[0]
+    lo, hi = steps - STEADY_WINDOW, steps
+
+    mgr, tuner = online_replay(wl, CFG)
+    online_steady = float(np.mean(np.asarray(tuner.cost_log)[-STEADY_WINDOW:]))
+
+    # offline baseline: Cori tunes once on the first phase, holds the period
+    off_res, off_dr = cori_tune_period(wl[:phase], CFG)
+    off_period = max(1, int(round(off_res.chosen_period)))
+    off_total, off_steady = _total_and_window(wl, off_period, lo)
+
+    fixed = {}
+    for p in FIXED:
+        total, steady = _total_and_window(wl, p, lo)
+        fixed[str(p)] = {"total": total, "steady": steady}
+    best_steady = min(v["steady"] for v in fixed.values())
+    best_total = min(v["total"] for v in fixed.values())
+
+    out = {
+        "steps": steps,
+        "online": {
+            "total": mgr.modeled_time,
+            "steady": online_steady,
+            "final_period": tuner.period,
+            "time_to_converge_steps": tuner.converged_at,
+            "tune_cycles": tuner.retunes,
+            "period_history": tuner.history,
+        },
+        "offline_phase_a": {
+            "period": off_period,
+            "dominant_reuse": off_dr,
+            "total": off_total,
+            "steady": off_steady,
+        },
+        "fixed": fixed,
+        "online_vs_best_fixed_steady": online_steady / best_steady,
+        "online_vs_best_fixed_total": mgr.modeled_time / best_total,
+        "online_vs_offline_steady": online_steady / off_steady,
+    }
+    save_json("online", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    o = r["online"]
+    print(f"online: period={o['final_period']} converged at step "
+          f"{o['time_to_converge_steps']} after {o['tune_cycles']} cycles")
+    print(f"steady-state cost/step: online {o['steady']:.2f} | offline "
+          f"{r['offline_phase_a']['steady']:.2f} "
+          f"(period {r['offline_phase_a']['period']})")
+    for p, v in r["fixed"].items():
+        print(f"    fixed {p:>3s}: steady {v['steady']:8.2f} total "
+              f"{v['total']:10.0f}")
+    print(f"online vs best fixed (steady): "
+          f"{r['online_vs_best_fixed_steady']:.3f}x; vs offline: "
+          f"{r['online_vs_offline_steady']:.3f}x")

@@ -56,6 +56,22 @@ def main(argv=None) -> None:
     worst = max(v["cori_vs_best_fixed"] for v in st.values())
     print(f"tiering_serving_cori,{t.us:.0f},max_vs_best_fixed={worst:.2f}x")
 
+    from benchmarks import sweep
+    with Timer() as t:
+        sw = sweep.run(quick=q)
+    worst_sw = min(v["speedup"] for v in sw.values())
+    err = max(v["max_rel_err"] for v in sw.values())
+    print(f"sweep_batched,{t.us:.0f},min_speedup={worst_sw:.1f}x;"
+          f"max_rel_err={err:.1e}")
+
+    from benchmarks import online
+    with Timer() as t:
+        on = online.run(quick=q)
+    print(f"online_cori,{t.us:.0f},"
+          f"vs_best_fixed_steady={on['online_vs_best_fixed_steady']:.3f};"
+          f"converge_steps={on['online']['time_to_converge_steps']};"
+          f"cycles={on['online']['tune_cycles']}")
+
     from benchmarks import roofline
     with Timer() as t:
         rr = roofline.run(quick=q)

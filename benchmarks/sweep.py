@@ -1,0 +1,71 @@
+"""Batched simulator sweep vs the per-candidate loop.
+
+`core.sim.sweep` evaluates a whole candidate ladder one-shot: the block
+histogram crosses to the device once, periods aggregate hierarchically on
+device, and candidates with equal padded period counts share a single
+`jax.vmap`-batched scan.  `sweep_loop` is the old path (host re-aggregation
++ one scan launch per candidate).  Reports warm wall-clock for a
+16-candidate Eq.-2 ladder and verifies the runtimes agree exactly.
+
+    PYTHONPATH=src python -m benchmarks.sweep
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import (bin_trace, candidate_periods, dominant_reuse,
+                        generate, prune_insignificant,
+                        reuse_distance_histogram, sweep, sweep_loop)
+
+REPS = 3
+
+
+def _ladder(bins, trace, n_cands: int = 16) -> np.ndarray:
+    hist = prune_insignificant(
+        reuse_distance_histogram(trace.pages, bin_width=bins.block * 10))
+    dr = dominant_reuse(hist)
+    # Halve DR so Eq. 2 yields a full n_cands-rung ladder on this trace.
+    ladder = candidate_periods(dr / 2, float(bins.num_accesses),
+                               max_candidates=n_cands,
+                               min_period=float(bins.block))
+    return ladder[:n_cands]
+
+
+def run(quick: bool = False):
+    apps = ["backprop"] if quick else ["backprop", "lud", "kmeans"]
+    out = {}
+    for app in apps:
+        trace = generate(app)
+        bins = bin_trace(trace)
+        ladder = _ladder(bins, trace)
+        # warm both paths (compile), then time
+        a = sweep_loop(bins, ladder)
+        b = sweep(bins, ladder)
+        max_err = max(abs(a[p].runtime - b[p].runtime) /
+                      max(1.0, abs(a[p].runtime)) for p in a)
+        t0 = time.monotonic()
+        for _ in range(REPS):
+            sweep_loop(bins, ladder)
+        t1 = time.monotonic()
+        for _ in range(REPS):
+            sweep(bins, ladder)
+        t2 = time.monotonic()
+        out[app] = {
+            "candidates": int(len(ladder)),
+            "loop_s": (t1 - t0) / REPS,
+            "batched_s": (t2 - t1) / REPS,
+            "speedup": (t1 - t0) / max(1e-9, (t2 - t1)),
+            "max_rel_err": max_err,
+        }
+    save_json("sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    for app, v in run().items():
+        print(f"{app:12s} {v['candidates']:3d} cands: loop "
+              f"{v['loop_s']:.2f}s batched {v['batched_s']:.2f}s -> "
+              f"{v['speedup']:.1f}x (max rel err {v['max_rel_err']:.2e})")

@@ -106,9 +106,12 @@ class AsyncCheckpointer:
         # Gather to host *before* handing to the thread (device buffers may
         # be donated by the next step).
         host_state = jax.tree.map(np.asarray, state)
+        # Non-daemon: an enqueued checkpoint survives an orderly crash (an
+        # uncaught exception unwinding the trainer) -- interpreter shutdown
+        # joins the writer, so restarts resume from the newest enqueued
+        # step, not the previous one.
         self._thread = threading.Thread(
-            target=save, args=(self.base, step, host_state, self.keep),
-            daemon=True)
+            target=save, args=(self.base, step, host_state, self.keep))
         self._thread.start()
 
     def wait(self):

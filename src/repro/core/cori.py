@@ -19,18 +19,20 @@ either when a trial budget is hit or when performance stops improving
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.reuse import ReuseHistogram
+from repro.core.reuse import ReuseHistogram, StreamingReuseCollector
 
 __all__ = [
     "dominant_reuse",
     "candidate_periods",
     "TuneResult",
     "Tuner",
+    "OnlineTuner",
     "trials_to_best",
 ]
 
@@ -112,6 +114,10 @@ class Tuner:
 
     def run(self, candidates: Sequence[float]) -> TuneResult:
         candidates = np.asarray(list(candidates), dtype=np.float64)
+        if candidates.size == 0:
+            raise ValueError(
+                "empty candidate ladder: nothing to trial (Eq. 2 produced no "
+                "periods -- check the reuse histogram / runtime horizon)")
         best_rt = np.inf
         best_p = float(candidates[0])
         tried_p: List[float] = []
@@ -133,6 +139,214 @@ class Tuner:
             best_rt, best_p = tried_rt[0], tried_p[0]
         return TuneResult(best_p, best_rt, len(tried_p),
                           np.asarray(tried_p), np.asarray(tried_rt), candidates)
+
+
+class OnlineTuner:
+    """Closed-loop Cori: profile -> trial -> hold, re-entered on drift.
+
+    The offline ``Tuner`` needs an oracle ``evaluate(period)`` it can call at
+    will (the simulator).  Inside a running system there is no oracle -- each
+    candidate must be *lived through* for a window of decode steps while the
+    system serves traffic.  The OnlineTuner is that state machine:
+
+      PROFILE  feed a ``StreamingReuseCollector`` for ``profile_steps`` steps,
+               then derive DR (Eq. 1) and the candidate ladder (Eq. 2) over
+               the ``horizon_steps`` trial horizon.  Decode steps are already
+               coarse, so reuse gaps bin at width 1 by default -- a wider
+               bin floors DR (and hence the shortest candidate) at the bin
+               centre, hiding period-1 ladders.
+      TRIAL    live each candidate period for a window of decode steps, but
+               rank candidates by the per-step cost of the window's *tail*
+               half only: the head absorbs the residency transient the
+               trial inherits from whatever ran before it (charging that
+               transient to the candidate biases the ranking against
+               whichever period is trialed first).  The offline Tuner's
+               stopping rule (``rel_tol`` improvement, ``patience`` stale
+               trials, ``max_trials`` budget) decides when to stop.
+      HOLD     run at the winning period.  Every measurement window the
+               per-step cost is compared against the post-tune baseline; a
+               regression beyond ``drift_ratio`` sustained for
+               ``drift_patience`` consecutive windows means the workload
+               changed phase -> reset the collector and re-enter PROFILE.
+
+    Cost windows (TRIAL and HOLD) are rounded up to a whole multiple of the
+    period being measured, so every window contains the same number of
+    tiering events -- otherwise a window boundary that aliases against the
+    period makes per-step costs oscillate and fakes drift on a perfectly
+    stable workload.
+
+    Drive it one decode step at a time with ``on_step``; it returns the
+    period the tiering runtime should use *now*.
+    """
+
+    PROFILE, TRIAL, HOLD = "profile", "trial", "hold"
+
+    def __init__(self, n_pages: int, default_period: int = 8,
+                 profile_steps: int = 64, trial_steps: int = 32,
+                 horizon_steps: Optional[int] = None,
+                 window: Optional[int] = None,
+                 patience: int = 2, rel_tol: float = 0.01,
+                 max_trials: Optional[int] = None,
+                 drift_ratio: float = 1.3, drift_patience: int = 2,
+                 bin_width: int = 1,
+                 min_period: float = 1.0, access_threshold: float = 0.05,
+                 max_candidates: int = 16, cost_log_len: int = 4096):
+        self.collector = StreamingReuseCollector(
+            n_pages, window=window or 4 * profile_steps, bin_width=bin_width)
+        self.profile_steps = profile_steps
+        self.trial_steps = trial_steps
+        self.horizon_steps = horizon_steps or 2 * trial_steps
+        self.patience = patience
+        self.rel_tol = rel_tol
+        self.max_trials = max_trials
+        self.drift_ratio = drift_ratio
+        self.drift_patience = drift_patience
+        self.min_period = min_period
+        self.access_threshold = access_threshold
+        self.max_candidates = max_candidates
+
+        self.state = self.PROFILE
+        self.period = int(default_period)
+        self.step = 0
+        self.dominant_reuse: Optional[float] = None
+        self.candidates: np.ndarray = np.empty(0)
+        self.tried: List[Tuple[float, float]] = []   # (period, cost/step)
+        self.baseline_cost: Optional[float] = None
+        self.retunes = 0          # completed PROFILE->TRIAL->HOLD cycles
+        self.history: List[Tuple[int, int]] = []     # (step, period) changes
+        self.converged_at: Optional[int] = None      # step of last HOLD entry
+        # recent per-step costs (bounded: this object lives in a serving loop)
+        self.cost_log: "collections.deque[float]" = collections.deque(
+            maxlen=cost_log_len)
+        self._drift_strikes = 0
+        self._trial_idx = 0
+        self._best_cost = np.inf
+        self._best_period = self.period
+        self._stale = 0
+        self._win_cost = 0.0
+        self._win_steps = 0
+        self._tail_cost = 0.0
+        self._tail_steps = 0
+
+    # -- per-step entry point ------------------------------------------------
+    def on_step(self, page_mass: Optional[np.ndarray] = None,
+                cost: float = 0.0,
+                accessed_ids: Optional[np.ndarray] = None) -> int:
+        """Feed one decode step (attention masses or accessed page ids, plus
+        the step's measured cost); returns the period to tier at."""
+        if accessed_ids is not None:
+            self.collector.observe(accessed_ids)
+        elif page_mass is not None:
+            self.collector.observe_mass(page_mass, self.access_threshold)
+        self._win_cost += float(cost)
+        self._win_steps += 1
+        self.cost_log.append(float(cost))
+        self.step += 1
+        if self.state == self.PROFILE:
+            if self._win_steps >= self.profile_steps:
+                self._begin_trials()
+        elif self.state == self.TRIAL:
+            if self._win_steps > self._cost_window() - self._tail_window():
+                self._tail_cost += float(cost)
+                self._tail_steps += 1
+            if self._win_steps >= self._cost_window():
+                self._finish_trial()
+        else:  # HOLD
+            if self._win_steps >= self._cost_window():
+                self._check_drift()
+        return self.period
+
+    def _cost_window(self) -> int:
+        """Measurement window: >= trial_steps, rounded up to a whole multiple
+        of the current period so every window sees the same number of
+        tiering events (no aliasing between window and period)."""
+        p = max(1, self.period)
+        return -(-self.trial_steps // p) * p
+
+    def _tail_window(self) -> int:
+        """Measured tail of a trial window: ~half of it, still a whole
+        multiple of the period (the head is warmup for the residency
+        transient)."""
+        p = max(1, self.period)
+        return max(1, (self._cost_window() // (2 * p))) * p
+
+    # -- state transitions ---------------------------------------------------
+    def _set_period(self, period: float) -> None:
+        p = max(1, int(round(period)))
+        if p != self.period:
+            self.history.append((self.step, p))
+        self.period = p
+
+    def _reset_window(self) -> None:
+        self._win_cost = 0.0
+        self._win_steps = 0
+        self._tail_cost = 0.0
+        self._tail_steps = 0
+
+    def _begin_trials(self) -> None:
+        hist = self.collector.histogram()
+        if hist.num_bins == 0:
+            # nothing re-accessed yet: keep the default period, try again
+            # after another profile window
+            self._reset_window()
+            return
+        self.dominant_reuse = dominant_reuse(hist)
+        ladder = candidate_periods(self.dominant_reuse,
+                                   float(self.horizon_steps),
+                                   max_candidates=self.max_candidates,
+                                   min_period=self.min_period)
+        # a candidate longer than the trial window cannot be observed even
+        # once per window -- clip the ladder (keep at least the head)
+        feasible = ladder[ladder <= self.trial_steps]
+        self.candidates = feasible if feasible.size else ladder[:1]
+        self.tried = []
+        self._trial_idx = 0
+        self._best_cost = np.inf
+        self._best_period = self.period
+        self._stale = 0
+        self.state = self.TRIAL
+        self._set_period(self.candidates[0])
+        self._reset_window()
+
+    def _finish_trial(self) -> None:
+        cost = self._tail_cost / max(1, self._tail_steps)
+        self.tried.append((float(self.period), cost))
+        if cost < self._best_cost * (1.0 - self.rel_tol):
+            self._best_cost, self._best_period = cost, self.period
+            self._stale = 0
+        else:
+            self._stale += 1
+        self._trial_idx += 1
+        done = (self._stale >= self.patience
+                or self._trial_idx >= len(self.candidates)
+                or (self.max_trials is not None
+                    and self._trial_idx >= self.max_trials))
+        if done:
+            self.state = self.HOLD
+            self.baseline_cost = None
+            self._drift_strikes = 0
+            self.retunes += 1
+            self.converged_at = self.step
+            self._set_period(self._best_period)
+        else:
+            self._set_period(self.candidates[self._trial_idx])
+        self._reset_window()
+
+    def _check_drift(self) -> None:
+        cost = self._win_cost / max(1, self._win_steps)
+        if self.baseline_cost is None:
+            self.baseline_cost = cost
+        elif cost > self.drift_ratio * max(self.baseline_cost, 1e-12):
+            self._drift_strikes += 1
+            if self._drift_strikes >= self.drift_patience:
+                # sustained regression == workload phase change: stale
+                # reuse info is worse than none
+                self.collector.reset()
+                self.state = self.PROFILE
+                self._drift_strikes = 0
+        else:
+            self._drift_strikes = 0
+        self._reset_window()
 
 
 def trials_to_best(runtimes_in_order: Sequence[float], tol: float = 0.005

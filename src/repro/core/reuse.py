@@ -18,13 +18,15 @@ Two collection modes, exactly as the paper uses them:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Tuple
+from typing import Deque, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "ReuseHistogram",
+    "StreamingReuseCollector",
     "reuse_distances",
     "reuse_distance_histogram",
     "loop_duration_histogram",
@@ -102,6 +104,66 @@ def loop_duration_histogram(loop_durations: np.ndarray, bin_width: int = 1000,
     values, counts = _bin(d, bin_width, drop_sub_bin)
     return ReuseHistogram(values.astype(np.float64), counts.astype(np.float64),
                           bin_width)
+
+
+class StreamingReuseCollector:
+    """Online Reuse Collector: sliding-window reuse gaps in the step domain.
+
+    Feed one decode step at a time (``observe`` with the accessed page ids,
+    or ``observe_mass`` with the raw per-page attention masses from the
+    serving monitor).  A reuse gap is recorded whenever a page is re-accessed
+    -- the step-domain analogue of the paper's reuse distance -- and gaps
+    older than ``window`` steps are evicted, so the histogram always reflects
+    the recent workload phase.  With ``window=None`` (or a window spanning
+    the whole run) the histogram is identical to the batch computation over
+    the full access log, which is the invariant the tests pin down.
+    """
+
+    def __init__(self, n_pages: int, window: Optional[int] = None,
+                 bin_width: int = 4):
+        self.n_pages = n_pages
+        self.window = window
+        self.bin_width = bin_width
+        self.last_access = np.full(n_pages, -1, np.int64)
+        self.step = 0
+        self._gaps: Deque[Tuple[int, int]] = collections.deque()  # (t, gap)
+
+    def observe(self, accessed_ids: np.ndarray) -> None:
+        """Record one decode step's accessed page ids."""
+        ids = np.asarray(accessed_ids, np.int64)
+        prev = self.last_access[ids]
+        t = self.step
+        for g in (t - prev[prev >= 0]).tolist():
+            self._gaps.append((t, g))
+        self.last_access[ids] = t
+        self.step += 1
+        if self.window is not None:
+            horizon = self.step - self.window
+            while self._gaps and self._gaps[0][0] < horizon:
+                self._gaps.popleft()
+
+    def observe_mass(self, page_mass: np.ndarray,
+                     threshold: float = 0.05) -> None:
+        """Record a step from raw per-page attention masses (the serving
+        monitor's output): mass >= threshold counts as an access."""
+        self.observe(np.nonzero(np.asarray(page_mass) >= threshold)[0])
+
+    @property
+    def num_samples(self) -> int:
+        return len(self._gaps)
+
+    def histogram(self, significance: float = 0.05) -> ReuseHistogram:
+        """Histogram of the windowed gaps (pruned, ready for Eq. 1)."""
+        gaps = np.fromiter((g for _, g in self._gaps), np.int64,
+                           count=len(self._gaps))
+        h = loop_duration_histogram(gaps, bin_width=self.bin_width)
+        return prune_insignificant(h, significance)
+
+    def reset(self) -> None:
+        """Forget all state (used when a phase change is detected)."""
+        self.last_access.fill(-1)
+        self.step = 0
+        self._gaps.clear()
 
 
 def prune_insignificant(hist: ReuseHistogram, frac: float = 0.05

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ __all__ = [
     "bin_trace",
     "simulate",
     "sweep",
+    "sweep_loop",
     "simulate_reference",
     "SCHEDULERS",
 ]
@@ -117,16 +118,41 @@ class SimResult:
         return self.fast_hits / max(1, self.num_accesses)
 
 
-def bin_trace(trace: Trace, block: int = DEFAULT_BLOCK) -> TraceBins:
-    """Bin a trace into [num_blocks, num_pages] access counts."""
+def bin_trace(trace: Trace, block: int = DEFAULT_BLOCK,
+              impl: str = "numpy") -> TraceBins:
+    """Bin a trace into [num_blocks, num_pages] access counts.
+
+    impl:
+      * "numpy"     -- vectorised bincount on host (default; fastest on CPU).
+      * "interpret" / "pallas" -- the fused ``kernels/page_hist`` histogram
+        kernel, one invocation per monitoring block (the accelerator path:
+        on TPU the access slice never leaves the device).
+    """
     pages = np.asarray(trace.pages, dtype=np.int64)
     n = pages.shape[0]
     num_blocks = (n + block - 1) // block
-    blk = np.arange(n, dtype=np.int64) // block
-    flat = blk * trace.num_pages + pages
-    hist = np.bincount(flat, minlength=num_blocks * trace.num_pages)
-    hist = hist.reshape(num_blocks, trace.num_pages).astype(np.float32)
+    if impl == "numpy":
+        blk = np.arange(n, dtype=np.int64) // block
+        flat = blk * trace.num_pages + pages
+        hist = np.bincount(flat, minlength=num_blocks * trace.num_pages)
+        hist = hist.reshape(num_blocks, trace.num_pages).astype(np.float32)
+    else:
+        hist = _bin_trace_page_hist(pages, trace.num_pages, num_blocks, block,
+                                    impl)
     return TraceBins(trace.name, hist, block, n, trace.num_pages)
+
+
+def _bin_trace_page_hist(pages: np.ndarray, num_pages: int, num_blocks: int,
+                         block: int, impl: str) -> np.ndarray:
+    """Per-block binning through the Pallas ``page_hist`` kernel."""
+    from repro.kernels import ops
+    pad = num_blocks * block - pages.shape[0]
+    ids = np.concatenate([pages, np.full(pad, -1, np.int64)])
+    ids = jnp.asarray(ids.reshape(num_blocks, block), jnp.int32)
+    zeros = jnp.zeros((num_pages,), jnp.float32)
+    counts = jax.lax.map(
+        lambda i: ops.page_hist(i, zeros, impl=impl)[0], ids)
+    return np.asarray(counts, np.float32)
 
 
 def _next_pow2(x: int) -> int:
@@ -149,17 +175,22 @@ def _aggregate_periods(bins: TraceBins, k_blocks: int) -> Tuple[np.ndarray, int]
     return ph, num_periods
 
 
+def interleaved_indices(num_pages: int, capacity: int) -> np.ndarray:
+    """The paper's SII-B initial placement: `capacity` page indices evenly
+    interleaved over the footprint.  Single source of truth shared by the
+    simulator, the symbolic tiering replay and the physical page pools."""
+    return (np.arange(capacity, dtype=np.int64) * num_pages) // max(1,
+                                                                    capacity)
+
+
 def _interleaved_init(num_pages: int, capacity: int) -> np.ndarray:
-    """Initial interleaved placement: every (num_pages/capacity)-th page fast."""
-    idx = (np.arange(capacity, dtype=np.int64) * num_pages) // capacity
+    """Initial interleaved placement as a residency mask."""
     init = np.zeros(num_pages, dtype=bool)
-    init[idx] = True
+    init[interleaved_indices(num_pages, capacity)] = True
     return init
 
 
-@functools.partial(
-    jax.jit, static_argnames=("predictive", "capacity"))
-def _sim_scan(period_hist, num_real, init_fast, *, predictive: bool,
+def _scan_one(period_hist, num_real, init_fast, *, predictive: bool,
               capacity: int, lat_fast, lat_slow, bw_slow, bw_penalty,
               mig_cost, period_overhead, ema_alpha):
     """Scan over periods.  Carry = placement / hotness / recency / totals."""
@@ -212,6 +243,29 @@ def _sim_scan(period_hist, num_real, init_fast, *, predictive: bool,
     return jnp.sum(rts), jnp.sum(swaps), jnp.sum(fast_hits)
 
 
+_sim_scan = functools.partial(jax.jit, static_argnames=("predictive",
+                                                        "capacity"))(_scan_one)
+
+
+@functools.partial(jax.jit, static_argnames=("predictive", "capacity"))
+def _sim_scan_batch(period_hists, num_reals, init_fast, *, predictive: bool,
+                    capacity: int, lat_fast, lat_slow, bw_slow, bw_penalty,
+                    mig_cost, period_overhead, ema_alpha):
+    """vmap of `_scan_one` over a [C, P, num_pages] candidate stack.
+
+    Every candidate shares the block grid, the initial placement and the
+    cost constants; only its period histogram (aggregated at its own period
+    length, zero-padded to the stack's P) and real-period count differ.  One
+    compile + one fused scan replaces C sequential `simulate` calls."""
+    one = functools.partial(
+        _scan_one, predictive=predictive, capacity=capacity,
+        lat_fast=lat_fast, lat_slow=lat_slow, bw_slow=bw_slow,
+        bw_penalty=bw_penalty, mig_cost=mig_cost,
+        period_overhead=period_overhead, ema_alpha=ema_alpha)
+    return jax.vmap(lambda ph, nr: one(ph, nr, init_fast))(period_hists,
+                                                           num_reals)
+
+
 def simulate(bins: TraceBins, period_requests: int, scheduler: str = "reactive",
              cfg: SimConfig = SimConfig()) -> SimResult:
     """Simulate one (trace, period, scheduler) combination."""
@@ -235,13 +289,131 @@ def simulate(bins: TraceBins, period_requests: int, scheduler: str = "reactive",
         scheduler=scheduler)
 
 
-def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
-          cfg: SimConfig = SimConfig()) -> Dict[int, SimResult]:
-    """Simulate a set of candidate periods (requests)."""
+def sweep_loop(bins: TraceBins, periods, scheduler: str = "reactive",
+               cfg: SimConfig = SimConfig()) -> Dict[int, SimResult]:
+    """Per-candidate `simulate` loop (the pre-batching reference path).
+
+    Each distinct period aggregation has its own scan length, so this path
+    pays one XLA compile per candidate -- kept as the equivalence oracle and
+    the benchmark baseline for the batched `sweep`."""
     out: Dict[int, SimResult] = {}
     for p in periods:
         r = simulate(bins, int(p), scheduler, cfg)
         out[r.period_requests] = r
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _agg_rows(h, *, m: int):
+    """Sum every m consecutive rows (device-side period aggregation)."""
+    p = h.shape[0]
+    pp = -(-p // m) * m
+    if pp > p:
+        h = jnp.pad(h, ((0, pp - p), (0, 0)))
+    return h.reshape(pp // m, m, h.shape[1]).sum(axis=1)
+
+
+# Device-resident prefix sums of each TraceBins' block histogram, keyed by
+# object identity and evicted when the bins are collected: tuners call
+# `sweep` many times on the same trace, and the transfer + cumsum is by far
+# the most expensive part of a warm sweep.
+_CUM_CACHE: Dict[int, jnp.ndarray] = {}
+
+
+def _cum_hist(bins: TraceBins) -> jnp.ndarray:
+    import weakref
+    key = id(bins)
+    cum = _CUM_CACHE.get(key)
+    if cum is None:
+        cum = jnp.cumsum(jnp.asarray(bins.block_hist), axis=0)
+        _CUM_CACHE[key] = cum
+        weakref.finalize(bins, _CUM_CACHE.pop, key, None)
+    return cum
+
+
+def _device_period_hists(bins: TraceBins, ks) -> Dict[int, Tuple[jnp.ndarray,
+                                                                 int]]:
+    """Period histograms for every candidate, aggregated on device.
+
+    The block histogram crosses to the device once and is prefix-summed
+    along the block axis; each candidate's period rows are then differences
+    of the cumulative sums at its own period boundaries -- O(periods)
+    gathers per candidate instead of a full pass over the block grid.
+    Counts are integer-valued, so as long as per-page cumulative counts stay
+    below 2**24 the float32 prefix sums (and hence the diffs) are exact and
+    the result is bit-identical to host-side `_aggregate_periods`; beyond
+    that the per-candidate reshape-sum path is used instead."""
+    ks = sorted(set(ks))
+    if bins.num_accesses >= 2 ** 24:   # cumsum no longer exact in float32
+        base = jnp.asarray(bins.block_hist)
+        return {k: (_agg_rows(base, m=k), -(-bins.num_blocks // k))
+                for k in ks}
+    cum = _cum_hist(bins)
+    zero = jnp.zeros((1, bins.num_pages), cum.dtype)
+    out: Dict[int, Tuple[jnp.ndarray, int]] = {}
+    for k in ks:
+        nr = -(-bins.num_blocks // k)
+        ends = np.minimum(np.arange(1, nr + 1) * k, bins.num_blocks) - 1
+        at_ends = cum[jnp.asarray(ends)]
+        out[k] = (at_ends - jnp.concatenate([zero, at_ends[:-1]]), nr)
+    return out
+
+
+# Candidate stacks are chunked so a single [C, P, num_pages] stack never
+# exceeds this many float32 elements (~256 MB).
+_SWEEP_CHUNK_ELEMS = 64 * 1024 * 1024
+
+
+def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
+          cfg: SimConfig = SimConfig()) -> Dict[int, SimResult]:
+    """Simulate a set of candidate periods (requests) in one batched pass.
+
+    The per-candidate `simulate` loop (kept as `sweep_loop`) re-reads and
+    re-aggregates the full block histogram on host and launches one scan per
+    candidate.  Here the whole ladder is evaluated one-shot: device-side
+    hierarchical aggregation (`_device_period_hists`), then candidates with
+    equal pow2-padded period counts are stacked and driven through a single
+    `jax.vmap`-batched scan (`_sim_scan_batch`).  Results match `sweep_loop`
+    exactly -- same per-period math, padded periods masked by each
+    candidate's real count."""
+    if scheduler not in SCHEDULERS:
+        raise ValueError(f"scheduler must be one of {SCHEDULERS}")
+    ks = sorted({max(1, int(round(int(p) / bins.block))) for p in periods})
+    if not ks:
+        return {}
+    capacity = cfg.fast_capacity(bins.num_pages)
+    init_fast = jnp.asarray(_interleaved_init(bins.num_pages, capacity))
+    hists = _device_period_hists(bins, ks)
+    # Group candidates whose pow2-padded period counts coincide: within a
+    # group the stack has zero padding waste, so the batch does the same
+    # arithmetic as the loop in 1/C the scan iterations.
+    groups: Dict[int, List[int]] = {}
+    for k in ks:
+        groups.setdefault(_next_pow2(hists[k][1]), []).append(k)
+    out: Dict[int, SimResult] = {}
+    for p2, group in groups.items():
+        max_c = max(1, _SWEEP_CHUNK_ELEMS // (p2 * bins.num_pages))
+        for lo in range(0, len(group), max_c):
+            chunk = group[lo: lo + max_c]
+            stack = jnp.stack(
+                [jnp.pad(hists[k][0], ((0, p2 - hists[k][0].shape[0]), (0, 0)))
+                 for k in chunk])
+            nreals = jnp.asarray([hists[k][1] for k in chunk], jnp.int32)
+            rts, swaps, hits = _sim_scan_batch(
+                stack, nreals, init_fast,
+                predictive=(scheduler == "predictive"), capacity=capacity,
+                lat_fast=cfg.lat_fast, lat_slow=cfg.lat_slow,
+                bw_slow=cfg.bw_slow, bw_penalty=cfg.bw_penalty,
+                mig_cost=cfg.mig_cost,
+                period_overhead=cfg.period_overhead(bins.num_pages),
+                ema_alpha=cfg.ema_alpha)
+            for i, k in enumerate(chunk):
+                out[k * bins.block] = SimResult(
+                    runtime=float(rts[i]),
+                    data_moved_pages=float(swaps[i]) * 2.0,
+                    migrations=float(swaps[i]), fast_hits=float(hits[i]),
+                    num_accesses=bins.num_accesses,
+                    period_requests=k * bins.block, scheduler=scheduler)
     return out
 
 

@@ -46,9 +46,18 @@ def page_hist(ids: jnp.ndarray, hotness: jnp.ndarray, *, alpha: float = 0.5,
               threshold: float = 1.0, tile: int = PAGE_TILE,
               interpret: bool = False):
     """ids: int32[P] page ids of one period (pad with -1); hotness:
-    f32[num_pages].  Returns (counts, new_hotness, hot_mask)."""
+    f32[num_pages].  Returns (counts, new_hotness, hot_mask).
+
+    ``num_pages`` need not be a tile multiple: the page state is zero-padded
+    to the grid and the outputs sliced back (padding pages can never match a
+    real id, so the extra lanes stay zero)."""
     num_pages = hotness.shape[0]
-    assert num_pages % tile == 0, (num_pages, tile)
+    padded = -(-num_pages // tile) * tile
+    if padded != num_pages:
+        c, h, m = page_hist(ids, jnp.pad(hotness, (0, padded - num_pages)),
+                            alpha=alpha, threshold=threshold, tile=tile,
+                            interpret=interpret)
+        return c[:num_pages], h[:num_pages], m[:num_pages]
     grid = (num_pages // tile,)
     kernel = functools.partial(_kernel, alpha=alpha, threshold=threshold,
                                tile=tile)

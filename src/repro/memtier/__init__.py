@@ -16,7 +16,16 @@ from repro.core import cori
 from repro.memtier.tiering import PagedPools, TierConfig, TieringManager
 
 __all__ = ["PagedPools", "TierConfig", "TieringManager", "replay",
-           "cori_tune_period", "resident_mask"]
+           "online_replay", "cori_tune_period", "resident_mask",
+           "interleaved_resident"]
+
+
+def interleaved_resident(n: int, hbm_pages: int) -> np.ndarray:
+    """Interleaved initial symbolic residency (paper SII-B placement)."""
+    from repro.core.sim import interleaved_indices
+    resident = np.zeros(n, bool)
+    resident[interleaved_indices(n, hbm_pages)] = True
+    return resident
 
 
 def resident_mask(mgr: TieringManager, pools: Optional[PagedPools]):
@@ -34,39 +43,43 @@ def replay(page_mass_seq: np.ndarray, cfg: TierConfig,
     steps, n = page_mass_seq.shape
     mgr = TieringManager(n, cfg)
     symbolic = pools is None
-    resident = np.zeros(n, bool)
     if symbolic:
-        # interleaved initial residency (paper SII-B)
-        idx = (np.arange(cfg.hbm_pages) * n) // max(1, cfg.hbm_pages)
-        resident[idx] = True
-        slot_of = np.full(n, -1, np.int32)
-        slot_of[idx] = np.arange(cfg.hbm_pages)
+        resident = interleaved_resident(n, cfg.hbm_pages)
     for t in range(steps):
         if symbolic:
             mgr.on_step(page_mass_seq[t], resident)
-            if (t + 1) % cfg.period_steps == 0:
-                _symbolic_tier(mgr, resident)
+            mgr.maybe_tier_symbolic(resident)
         else:
             mgr.on_step(page_mass_seq[t], resident_mask(mgr, pools))
             pools = mgr.maybe_tier(pools)
     return mgr
 
 
-def _symbolic_tier(mgr: TieringManager, resident: np.ndarray):
-    cfg = mgr.cfg
-    a = cfg.ema_alpha
-    mgr.hotness = a * mgr.counts_since_tier + (1 - a) * mgr.hotness
-    mgr.counts_since_tier[:] = 0.0
-    score = (mgr.hotness * 1e6 + (mgr.last_access + 1) / (mgr.step + 1)
-             + 0.5 * resident)
-    desired = np.argsort(-score, kind="stable")[: cfg.hbm_pages]
-    new_res = np.zeros(mgr.n, bool)
-    new_res[desired] = True
-    n_mig = int((new_res & ~resident).sum())
-    mgr.migrations += n_mig
-    mgr.data_moved_pages += 2 * n_mig
-    mgr.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
-    resident[:] = new_res
+def online_replay(page_mass_seq: np.ndarray, cfg: TierConfig,
+                  tuner: Optional[cori.OnlineTuner] = None,
+                  ) -> "tuple[TieringManager, cori.OnlineTuner]":
+    """Closed-loop replay: an ``OnlineTuner`` drives the tiering period live.
+
+    Each decode step feeds the tuner the page masses and the step's measured
+    cost (modeled-time delta, including any migration burst the tier just
+    paid); the period it returns is applied to the manager *before* the next
+    step.  This is the in-system analogue of ``cori_tune_period`` -- no
+    oracle re-simulation, the trials are lived through by the running
+    manager.  Returns (manager, tuner)."""
+    steps, n = page_mass_seq.shape
+    mgr = TieringManager(n, cfg)
+    if tuner is None:
+        tuner = cori.OnlineTuner(n, default_period=cfg.period_steps,
+                                 access_threshold=cfg.access_threshold)
+    resident = interleaved_resident(n, cfg.hbm_pages)
+    for t in range(steps):
+        before = mgr.modeled_time
+        mgr.on_step(page_mass_seq[t], resident)
+        mgr.maybe_tier_symbolic(resident)
+        period = tuner.on_step(page_mass_seq[t],
+                               cost=mgr.modeled_time - before)
+        mgr.set_period(period)
+    return mgr, tuner
 
 
 def cori_tune_period(page_mass_seq: np.ndarray, cfg: TierConfig,
@@ -96,13 +109,16 @@ def cori_tune_period(page_mass_seq: np.ndarray, cfg: TierConfig,
 
 
 class AdaptiveTuner:
-    """Online re-tuning (the paper's SIV-D extension): monitor the working
-    set's hit rate; when it drifts below ``retune_ratio`` x the rate
-    observed right after tuning, the access pattern has changed -- rerun
-    the Cori loop (profile window -> DR -> ladder -> trials) on the recent
-    window.  Static Cori tunes once; this closes the loop for phase-changing
-    workloads (e.g. a serving mix shifting from RAG loops to random
-    retrieval)."""
+    """Offline-resimulation re-tuning (the earlier SIV-D sketch): buffer a
+    window of masses, watch the hit rate, and re-run the *offline* Cori
+    loop (``cori_tune_period``, i.e. oracle replays of the buffered window)
+    when it drifts.
+
+    Superseded for in-loop use by ``repro.core.cori.OnlineTuner`` +
+    ``online_replay`` (see docs/online_tuning.md), which live-trials
+    candidates against the running manager instead of re-simulating, and is
+    where drift/measurement improvements land.  Kept as the cheap
+    buffered-window variant for replayed mass sequences."""
 
     def __init__(self, cfg: TierConfig, window: int = 64,
                  retune_ratio: float = 0.7):

@@ -19,6 +19,7 @@ migration and wakeup costs per tiering period.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -61,9 +62,9 @@ class PagedPools:
     @classmethod
     def create(cls, k_pages, v_pages, hbm_pages: int):
         """Interleaved initial residency (paper SII-B initial placement)."""
+        from repro.core.sim import interleaved_indices
         n = k_pages.shape[0]
-        init = ((np.arange(hbm_pages, dtype=np.int64) * n)
-                // max(1, hbm_pages)).astype(np.int32)
+        init = interleaved_indices(n, hbm_pages).astype(np.int32)
         slot_of = np.full((n,), -1, np.int32)
         slot_of[init] = np.arange(hbm_pages)
         return cls(
@@ -83,20 +84,41 @@ def _migrate(pool_hbm, pool_host, slots, logicals):
 class TieringManager:
     """Periodic page scheduler over a PagedPools working set."""
 
-    def __init__(self, n_logical: int, cfg: TierConfig):
+    def __init__(self, n_logical: int, cfg: TierConfig,
+                 access_log_len: int = 65536):
         self.cfg = cfg
         self.n = n_logical
         self.hotness = np.zeros(n_logical, np.float64)
         self.last_access = np.full(n_logical, -1.0)
         self.step = 0
-        self.access_log: List[np.ndarray] = []   # accessed page ids per step
+        # accessed page ids per step, bounded: the manager lives inside the
+        # serving loop, and the online path reads reuse from the tuner's
+        # StreamingReuseCollector, not from this log (which feeds the
+        # offline `reuse_histogram`/`cori_candidates` flow)
+        self.access_log: "collections.deque[np.ndarray]" = collections.deque(
+            maxlen=access_log_len)
         self.counts_since_tier = np.zeros(n_logical, np.float64)
+        # live tiering period (what online Cori drives); counted against the
+        # steps elapsed since the last tier so period changes apply cleanly
+        # mid-run
+        self.period = max(1, int(cfg.period_steps))
+        self._since_tier = 0
         # accounting
         self.migrations = 0
         self.modeled_time = 0.0
         self.data_moved_pages = 0
         self.hits = 0
         self.misses = 0
+
+    def set_period(self, period_steps: int) -> None:
+        """Change the tiering period live (the online-Cori control knob)."""
+        self.period = max(1, int(period_steps))
+
+    def _tier_due(self) -> bool:
+        if self._since_tier < self.period:
+            return False
+        self._since_tier = 0
+        return True
 
     # -- monitor -----------------------------------------------------------
     def on_step(self, page_mass: np.ndarray, resident: np.ndarray):
@@ -113,23 +135,29 @@ class TieringManager:
         self.misses += int(misses.sum())
         self.modeled_time += hits.sum() * 1.0 + misses.sum() * self.cfg.miss_penalty
         self.step += 1
+        self._since_tier += 1
 
     # -- the page scheduler (paper SII-B swap rule) --------------------------
-    def maybe_tier(self, pools: PagedPools) -> PagedPools:
-        if self.step == 0 or self.step % self.cfg.period_steps != 0:
-            return pools
-        cfg = self.cfg
-        a = cfg.ema_alpha
+    def _rank_desired(self, resident: np.ndarray) -> np.ndarray:
+        """EMA-update hotness and rank the desired working set (the paper's
+        swap rule): hotness primary, recency secondary, residency tertiary."""
+        a = self.cfg.ema_alpha
         self.hotness = a * self.counts_since_tier + (1 - a) * self.hotness
         self.counts_since_tier[:] = 0.0
-        # rank: hotness primary, recency secondary, residency tertiary
-        resident = pools.slot_of >= 0
         score = (self.hotness * 1e6
                  + (self.last_access + 1) / (self.step + 1)
                  + 0.5 * resident)
-        desired = np.argsort(-score, kind="stable")[: cfg.hbm_pages]
+        desired = np.argsort(-score, kind="stable")[: self.cfg.hbm_pages]
         desired_set = np.zeros(self.n, bool)
         desired_set[desired] = True
+        return desired_set
+
+    def maybe_tier(self, pools: PagedPools) -> PagedPools:
+        if self.step == 0 or not self._tier_due():
+            return pools
+        cfg = self.cfg
+        resident = pools.slot_of >= 0
+        desired_set = self._rank_desired(resident)
         evict = np.nonzero(resident & ~desired_set)[0]
         bring = np.nonzero(desired_set & ~resident)[0]
         n_mig = min(len(evict), len(bring))
@@ -149,6 +177,20 @@ class TieringManager:
         self.data_moved_pages += 2 * int(n_mig)
         self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
         return pools
+
+    def maybe_tier_symbolic(self, resident: np.ndarray) -> bool:
+        """Tiering over symbolic residency (no physical pools): same swap
+        rule and accounting as ``maybe_tier``, used for fast period trials.
+        Mutates ``resident`` in place; returns whether a tier happened."""
+        if self.step == 0 or not self._tier_due():
+            return False
+        desired_set = self._rank_desired(resident)
+        n_mig = int((desired_set & ~resident).sum())
+        self.migrations += n_mig
+        self.data_moved_pages += 2 * n_mig
+        self.modeled_time += n_mig * self.cfg.mig_cost + self.cfg.wakeup_cost
+        resident[:] = desired_set
+        return True
 
     # -- Cori integration ----------------------------------------------------
     def reuse_histogram(self, bin_width: int = 4) -> reuse.ReuseHistogram:

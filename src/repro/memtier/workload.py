@@ -19,12 +19,17 @@ __all__ = ["attention_sink", "periodic_context", "random_lookup"]
 
 
 def attention_sink(steps: int, n_pages: int, sink_pages: int = 2,
-                   window_pages: int = 4, seed: int = 0) -> np.ndarray:
+                   window_pages: int = 4, seed: int = 0,
+                   drift_every: int = 2) -> np.ndarray:
+    """``drift_every`` = decode steps between moves of the recent window; at
+    1 the hot set moves every step, so the best tiering period is
+    unambiguously the shortest (no aliasing between tier cadence and
+    drift)."""
     rng = np.random.default_rng(seed)
     m = np.zeros((steps, n_pages), np.float32)
     for t in range(steps):
         m[t, :sink_pages] = 0.3 + 0.1 * rng.random(sink_pages)
-        cur = min(n_pages - 1, (t // 2) % n_pages)
+        cur = min(n_pages - 1, (t // drift_every) % n_pages)
         lo = max(0, cur - window_pages)
         m[t, lo:cur + 1] = 0.2 + 0.1 * rng.random(cur + 1 - lo)
     return m

@@ -11,7 +11,7 @@ realistic monitor) and returns the per-page attention-mass sequence that
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ __all__ = ["generate", "monitored_generate", "page_mass_from_attention"]
 def _sample(logits, key, temperature: float):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key / 1, logits / temperature, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
 def generate(params, cfg: ModelConfig, prompt_tokens, steps: int, *,
@@ -99,9 +99,16 @@ def page_mass_from_attention(q, k, cache_pos, cur_pos, page_size: int,
 
 def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
                        *, page_size: int = 16, temperature: float = 0.0,
-                       cond=None, extra_embeds=None, key=None):
+                       cond=None, extra_embeds=None, key=None,
+                       on_mass: Optional[Callable[[int, np.ndarray], None]]
+                       = None):
     """generate() + per-step page-mass monitoring of one attention layer.
-    Returns (tokens [B,steps], page_mass [steps, n_pages])."""
+    Returns (tokens [B,steps], page_mass [steps, n_pages]).
+
+    ``on_mass(step_idx, mass)`` is called with each step's per-page
+    attention masses *before* the next decode step runs -- the hook the
+    online tiering loop (TieringManager + OnlineTuner) hangs off, so the
+    migration period can be re-tuned while generation is in flight."""
     b, plen = prompt_tokens.shape
     prefix = cfg.prefix_len or 0
     max_len = plen + prefix + steps
@@ -137,6 +144,8 @@ def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
     mon_fn = jax.jit(monitor)
     for i in range(steps - 1):
         masses.append(np.asarray(mon_fn(cache, tok, pos)))
+        if on_mass is not None:
+            on_mass(i, masses[-1])
         logits, cache = step_fn(cache, tok, pos)
         key = jax.random.fold_in(key, i)
         tok = _sample(logits[:, 0], key, temperature)[:, None]

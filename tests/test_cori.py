@@ -1,8 +1,10 @@
-"""Cori frequency generator + tuner: Eq. 1 / Eq. 2 math and tuning logic."""
+"""Cori frequency generator + tuner: Eq. 1 / Eq. 2 math and tuning logic.
+
+Property-style coverage runs as deterministic ``pytest.mark.parametrize``
+cases over seeded random inputs (no optional ``hypothesis`` dependency --
+the test substrate must collect on a bare jax+pytest install)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (ReuseHistogram, Tuner, candidate_periods,
                         dominant_reuse, loop_duration_histogram,
@@ -35,16 +37,32 @@ def test_dominant_reuse_favours_short():
     assert dominant_reuse(h) < plain
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.tuples(st.floats(1, 1e6), st.integers(1, 1000)),
-                min_size=1, max_size=20, unique_by=lambda t: t[0]))
-def test_dominant_reuse_bounded(pairs):
-    values = np.array([p[0] for p in pairs])
-    counts = np.array([p[1] for p in pairs], float)
+@pytest.mark.parametrize("seed", range(50))
+def test_dominant_reuse_bounded(seed):
+    """DR is a weighted average, so it must lie within the reuse range."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 21))
+    values = rng.choice(np.arange(1, 10 ** 6), size=n, replace=False
+                        ).astype(float)
+    counts = rng.integers(1, 1001, size=n).astype(float)
     dr = dominant_reuse(_hist(values, counts))
     lo, hi = values.min(), values.max()
     tol = 1e-9 * max(1.0, hi)
     assert lo - tol <= dr <= hi + tol
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_dominant_reuse_permutation_invariant(seed):
+    """Eq. 1 sorts internally: bin order in the histogram must not matter."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 12))
+    values = rng.choice(np.arange(1, 10 ** 5), size=n, replace=False
+                        ).astype(float)
+    counts = rng.integers(1, 500, size=n).astype(float)
+    dr = dominant_reuse(_hist(values, counts))
+    perm = rng.permutation(n)
+    dr_perm = dominant_reuse(_hist(values[perm], counts[perm]))
+    assert dr == pytest.approx(dr_perm, rel=1e-12)
 
 
 def test_candidate_periods_eq2():
@@ -80,6 +98,22 @@ def test_tuner_max_trials():
     tuner = Tuner(lambda p: 1.0 / p, max_trials=3)
     res = tuner.run([1, 2, 3, 4, 5])
     assert res.trials == 3
+
+
+def test_tuner_empty_candidates_raises():
+    tuner = Tuner(lambda p: 1.0)
+    with pytest.raises(ValueError, match="empty candidate ladder"):
+        tuner.run([])
+
+
+def test_candidate_periods_endpoints_and_min_period():
+    # DR below min_period snaps up to min_period
+    c = candidate_periods(dr=0.25, runtime=100.0, min_period=1.0)
+    assert c[0] == 1.0
+    # ladder never exceeds Runtime/2
+    c = candidate_periods(dr=7.0, runtime=100.0)
+    assert c[-1] <= 50.0
+    assert c[0] == 7.0
 
 
 def test_trials_to_best():

@@ -1,0 +1,303 @@
+"""Online Cori: streaming reuse collection, closed-loop tuning, live periods.
+
+Covers the tentpole path end to end: StreamingReuseCollector vs the batch
+histogram, the OnlineTuner state machine, live period changes in the
+TieringManager, online_replay on phase-shifted workloads, and the serving
+engine's per-step mass hook + sampling PRNG regression."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import OnlineTuner, StreamingReuseCollector
+from repro.memtier import (TierConfig, TieringManager, cori_tune_period,
+                           interleaved_resident, online_replay, replay)
+from repro.memtier import workload as W
+
+CFG = TierConfig(hbm_pages=16, period_steps=8)
+
+
+# ---------------------------------------------------------------------------
+# streaming reuse collector
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wl_name", ["attention_sink", "periodic_context",
+                                     "random_lookup"])
+def test_streaming_histogram_matches_batch(wl_name):
+    """On a static workload the sliding-window histogram (window covering
+    the whole run) equals the batch histogram over the full access log."""
+    wl = getattr(W, wl_name)(200, 64)
+    mgr = replay(wl, CFG)
+    batch = mgr.reuse_histogram(bin_width=4)
+    col = StreamingReuseCollector(64, window=None, bin_width=4)
+    for t in range(wl.shape[0]):
+        col.observe_mass(wl[t], CFG.access_threshold)
+    stream = col.histogram()
+    np.testing.assert_array_equal(batch.values, stream.values)
+    np.testing.assert_array_equal(batch.counts, stream.counts)
+    # an ample finite window must agree as well
+    col2 = StreamingReuseCollector(64, window=10 * wl.shape[0], bin_width=4)
+    for t in range(wl.shape[0]):
+        col2.observe_mass(wl[t], CFG.access_threshold)
+    s2 = col2.histogram()
+    np.testing.assert_array_equal(batch.values, s2.values)
+    np.testing.assert_array_equal(batch.counts, s2.counts)
+
+
+def test_streaming_window_evicts_old_phase():
+    """Gaps older than the window fall out: after a phase change the
+    histogram only reflects the recent reuse distance."""
+    col = StreamingReuseCollector(8, window=40, bin_width=1)
+    # phase 1: page 0 re-accessed every 2 steps, for 60 steps
+    for t in range(60):
+        col.observe(np.array([0]) if t % 2 == 0 else np.array([], np.int64))
+    # phase 2: page 1 re-accessed every 5 steps, for 60 steps
+    for t in range(60, 120):
+        col.observe(np.array([1]) if t % 5 == 0 else np.array([], np.int64))
+    h = col.histogram()
+    assert h.num_bins >= 1
+    assert set(np.unique(h.values)) == {5.0}, "phase-1 gaps must be evicted"
+
+
+def test_streaming_reset():
+    col = StreamingReuseCollector(4, bin_width=1)
+    for _ in range(5):
+        col.observe(np.array([0, 1]))
+    assert col.num_samples > 0
+    col.reset()
+    assert col.num_samples == 0 and col.step == 0
+    assert (col.last_access == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# OnlineTuner state machine
+# ---------------------------------------------------------------------------
+
+
+def _drive(tuner, steps, ids_fn, cost_fn):
+    for t in range(steps):
+        tuner.on_step(accessed_ids=ids_fn(t), cost=cost_fn(tuner.period))
+    return tuner
+
+
+def test_online_tuner_trials_pick_best_candidate():
+    """Accessed ids with a 4-step reuse gap give DR=4; a cost curve with its
+    minimum at period 8 must make the tuner hold at 8."""
+    tuner = OnlineTuner(64, default_period=2, profile_steps=32,
+                        trial_steps=16, horizon_steps=64, bin_width=1,
+                        patience=3)
+    # page 0 re-accessed every 4 steps; filler pages reuse only at gap 63
+    ids = lambda t: np.array([0]) if t % 4 == 0 else np.array([1 + (t % 63)])
+    cost = lambda p: abs(p - 8) + 1.0
+    _drive(tuner, 400, ids, cost)
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.period == 8
+    assert tuner.dominant_reuse == pytest.approx(4.0, abs=1.0)
+    assert tuner.converged_at is not None
+
+
+def test_online_tuner_drift_triggers_reprofile():
+    tuner = OnlineTuner(8, default_period=2, profile_steps=16, trial_steps=8,
+                        horizon_steps=32, bin_width=1, drift_ratio=1.3)
+    ids = lambda t: np.array([t % 4])
+    _drive(tuner, 200, ids, lambda p: 1.0)
+    assert tuner.state == OnlineTuner.HOLD
+    cycles = tuner.retunes
+    # cost regresses 10x -> after drift_patience windows the detector must
+    # leave HOLD and work through a fresh PROFILE -> TRIAL cycle
+    _drive(tuner, 200, ids, lambda p: 10.0)
+    assert tuner.retunes > cycles
+
+
+def test_hold_window_aligns_to_period_no_false_drift():
+    """Regression: a held period that does not divide trial_steps must not
+    alias against the measurement window.  A stable workload whose cost has
+    a migration burst every `period` steps showed oscillating window costs
+    (1 vs 2 bursts per window) and re-profiled forever."""
+    tuner = OnlineTuner(64, default_period=4, profile_steps=40,
+                        trial_steps=32, horizon_steps=44, bin_width=1)
+    # page 0 reused every 20 steps -> DR=20 -> single-candidate ladder [20]
+    ids = lambda t: np.array([0]) if t % 20 == 0 else np.array([1 + (t % 63)])
+    # cost burst at every period boundary, flat otherwise
+    cost = lambda t: 17.0 if t % 20 == 0 else 1.0
+    for t in range(2000):
+        tuner.on_step(accessed_ids=ids(t), cost=cost(t))
+    assert tuner.period == 20
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.retunes == 1, "stable workload must not re-profile"
+
+
+def test_online_tuner_empty_reuse_keeps_default():
+    """No page is ever re-accessed: the tuner must not crash and must keep
+    the default period."""
+    tuner = OnlineTuner(64, default_period=4, profile_steps=8, trial_steps=4)
+    for t in range(32):
+        tuner.on_step(accessed_ids=np.array([t]), cost=1.0)
+    assert tuner.period == 4
+    assert tuner.state == OnlineTuner.PROFILE
+
+
+# ---------------------------------------------------------------------------
+# live tiering period
+# ---------------------------------------------------------------------------
+
+
+def test_set_period_changes_tier_cadence():
+    mgr = TieringManager(16, dataclasses.replace(CFG, hbm_pages=4,
+                                                 period_steps=4))
+    resident = interleaved_resident(16, 4)
+    mass = np.zeros(16, np.float32)
+    mass[:2] = 1.0
+    tiers = []
+    for t in range(16):
+        mgr.on_step(mass, resident)
+        if mgr.maybe_tier_symbolic(resident):
+            tiers.append(t)
+        if t == 7:
+            mgr.set_period(2)
+    assert tiers == [3, 7, 9, 11, 13, 15]
+
+
+def test_online_replay_profile_only_matches_fixed_replay():
+    """A tuner that never leaves PROFILE must leave the manager identical to
+    a fixed-period replay (the closed loop is a no-op until it acts)."""
+    wl = W.attention_sink(100, 64)
+    tuner = OnlineTuner(64, default_period=CFG.period_steps,
+                        profile_steps=10 ** 6,
+                        access_threshold=CFG.access_threshold)
+    mgr_on, _ = online_replay(wl, CFG, tuner=tuner)
+    mgr_fix = replay(wl, CFG)
+    assert mgr_on.modeled_time == mgr_fix.modeled_time
+    assert mgr_on.migrations == mgr_fix.migrations
+
+
+# ---------------------------------------------------------------------------
+# closed loop on phase-shifted workloads (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+
+def _phase_shifted(phase=600, n=64):
+    # drift_every=1: the hot set moves every step in phase B, so the best
+    # period there is unambiguously the shortest (no tier/drift aliasing)
+    return np.concatenate([W.random_lookup(phase, n, seed=0),
+                           W.attention_sink(phase, n, seed=1, drift_every=1)])
+
+
+def test_online_retunes_and_reaches_best_fixed_steady_state():
+    """Acceptance: on a phase-shifted workload the online tuner re-tunes the
+    period and its steady-state cost ends within 5% of the best fixed
+    period's cost over the same final window."""
+    wl = _phase_shifted()
+    steps = wl.shape[0]
+    lo, hi = steps - 100, steps
+    mgr, tuner = online_replay(wl, CFG)
+    assert tuner.retunes >= 2, "phase shift must trigger at least one re-tune"
+    assert tuner.converged_at is not None and tuner.converged_at < steps
+    online_steady = float(np.mean(np.asarray(tuner.cost_log)[lo - hi:]))
+
+    def fixed_window(p):
+        c = dataclasses.replace(CFG, period_steps=p)
+        return (replay(wl[:hi], c).modeled_time
+                - replay(wl[:lo], c).modeled_time) / (hi - lo)
+
+    best_fixed = min(fixed_window(p) for p in (1, 2, 4, 8, 16, 32, 64, 200))
+    assert online_steady <= 1.05 * best_fixed
+
+
+def test_online_converges_near_offline_choice_per_phase():
+    """After the last re-tune the online period must sit within the same
+    cost neighbourhood as the offline Tuner's choice for the final phase."""
+    wl = _phase_shifted()
+    phase_b = wl[600:]
+    _, tuner = online_replay(wl, CFG)
+    off_res, _ = cori_tune_period(phase_b, CFG)
+
+    def steady(p):
+        c = dataclasses.replace(CFG, period_steps=max(1, int(round(p))))
+        full = replay(phase_b, c).modeled_time
+        head = replay(phase_b[:-100], c).modeled_time
+        return (full - head) / 100.0
+
+    online_cost = steady(tuner.period)
+    offline_cost = steady(off_res.chosen_period)
+    assert online_cost <= 1.10 * offline_cost
+
+
+def test_online_beats_stale_offline_tuning():
+    """Tune-once-on-phase-A Cori goes stale after the shift; the closed loop
+    must end the run strictly cheaper in steady state."""
+    wl = _phase_shifted()
+    steps = wl.shape[0]
+    lo, hi = steps - 100, steps
+    _, tuner = online_replay(wl, CFG)
+    online_steady = float(np.mean(np.asarray(tuner.cost_log)[lo - hi:]))
+    off_res, _ = cori_tune_period(wl[:600], CFG)
+    c = dataclasses.replace(CFG,
+                            period_steps=max(1, int(round(off_res.chosen_period))))
+    off_steady = (replay(wl[:hi], c).modeled_time
+                  - replay(wl[:lo], c).modeled_time) / (hi - lo)
+    assert online_steady < off_steady
+
+
+# ---------------------------------------------------------------------------
+# serving engine: mass hook + sampling PRNG regression
+# ---------------------------------------------------------------------------
+
+
+def test_sample_prng_deterministic_and_folds():
+    """Regression for the `key / 1` bug: temperature sampling must accept a
+    PRNG key, be deterministic for a fixed key, and differ across fold_in
+    steps."""
+    import jax
+    from repro.serve.engine import _sample
+    logits = jax.random.normal(jax.random.PRNGKey(7), (4, 128))
+    key = jax.random.PRNGKey(0)
+    a = _sample(logits, key, temperature=1.0)
+    b = _sample(logits, key, temperature=1.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    draws = [np.asarray(_sample(logits, jax.random.fold_in(key, i), 1.0))
+             for i in range(8)]
+    assert any(not np.array_equal(draws[0], d) for d in draws[1:]), \
+        "folded keys must change the sample"
+    # greedy path ignores the key entirely
+    g = _sample(logits, key, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.argmax(np.asarray(logits), axis=-1))
+
+
+def test_generate_with_temperature_is_deterministic():
+    """End-to-end sampling path: same key -> same tokens (would crash with
+    the old `key / 1` PRNG bug)."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    cfg = C.reduced("stablelm-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    t1 = generate(params, cfg, prompts, steps=5, temperature=0.8,
+                  key=jax.random.PRNGKey(3))
+    t2 = generate(params, cfg, prompts, steps=5, temperature=0.8,
+                  key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_monitored_generate_on_mass_hook():
+    """The per-step hook sees exactly the masses the engine returns, in
+    order -- the contract the online tiering loop relies on."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import monitored_generate
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                 cfg.vocab_size)
+    seen = []
+    toks, mass = monitored_generate(params, cfg, prompts, steps=6,
+                                    page_size=4,
+                                    on_mass=lambda i, m: seen.append((i, m)))
+    assert [i for i, _ in seen] == list(range(mass.shape[0]))
+    np.testing.assert_array_equal(np.stack([m for _, m in seen]), mass)

@@ -1,11 +1,12 @@
-"""Hybrid-memory simulator: JAX scan vs pure-python oracle + invariants."""
+"""Hybrid-memory simulator: JAX scan vs pure-python oracle + invariants.
+
+Property-style coverage runs as deterministic ``pytest.mark.parametrize``
+cases over seeded random traces (no optional ``hypothesis`` dependency)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (SimConfig, Trace, bin_trace, generate, simulate,
-                        simulate_reference)
+                        simulate_reference, sweep, sweep_loop)
 
 
 def _small_trace(seed=0):
@@ -62,26 +63,55 @@ def test_fast_hits_bounded_by_capacity_share():
     assert r.migrations <= capacity * num_periods
 
 
-@settings(max_examples=20, deadline=None)
-@given(data=st.data())
-def test_property_random_traces(data):
+@pytest.mark.parametrize("seed", range(20))
+def test_property_random_traces(seed):
     """Invariants over random traces: scan==oracle, bounded hitrate,
     nonnegative overhead decomposition."""
-    n_pages = data.draw(st.integers(8, 64))
-    n = data.draw(st.integers(200, 2000))
-    seed = data.draw(st.integers(0, 2**31 - 1))
     rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(8, 65))
+    n = int(rng.integers(200, 2001))
     pages = rng.integers(0, n_pages, size=n).astype(np.int32)
     tr = Trace("rand", pages, n_pages, np.array([n]))
     bins = bin_trace(tr, block=50)
-    period = data.draw(st.sampled_from([50, 100, 250]))
-    sched = data.draw(st.sampled_from(["reactive", "predictive"]))
+    period = int(rng.choice([50, 100, 250]))
+    sched = ["reactive", "predictive"][seed % 2]
     a = simulate(bins, period, sched)
     b = simulate_reference(bins, period, sched)
     np.testing.assert_allclose(a.runtime, b.runtime, rtol=1e-4)
     assert a.migrations == b.migrations
     assert 0.0 <= a.fast_hitrate <= 1.0
     assert a.runtime >= n * 1.0
+
+
+@pytest.mark.parametrize("scheduler", ["reactive", "predictive"])
+def test_batched_sweep_matches_loop(scheduler):
+    """The one-shot vmap-batched sweep must reproduce the per-candidate
+    simulate loop exactly (acceptance: within 1e-6 on the seed traces)."""
+    bins = bin_trace(_small_trace())
+    periods = [100, 300, 700, 1000, 2300]
+    a = sweep_loop(bins, periods, scheduler)
+    b = sweep(bins, periods, scheduler)
+    assert set(a) == set(b)
+    for p in a:
+        np.testing.assert_allclose(a[p].runtime, b[p].runtime, rtol=1e-6)
+        assert a[p].migrations == b[p].migrations
+        assert a[p].fast_hits == b[p].fast_hits
+
+
+def test_batched_sweep_empty_and_duplicates():
+    bins = bin_trace(_small_trace())
+    assert sweep(bins, []) == {}
+    # periods snapping to the same block count collapse to one result
+    out = sweep(bins, [100, 120, 149])
+    assert list(out) == [100]
+
+
+def test_bin_trace_pallas_matches_numpy():
+    """The Pallas page_hist binning path == the bincount path."""
+    tr = _small_trace()
+    a = bin_trace(tr)
+    b = bin_trace(tr, impl="interpret")
+    np.testing.assert_array_equal(a.block_hist, b.block_hist)
 
 
 def test_capacity_respected_in_placement():
