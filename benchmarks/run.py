@@ -14,12 +14,50 @@ import sys
 from benchmarks.common import Timer
 
 
+def smoke() -> None:
+    """Fast bit-rot check (CI): tiny-shape runs of the benchmarks wired to
+    the serving/tuning path -- online, sweep and traffic -- asserting each
+    one's headline invariant still holds."""
+    print("name,us_per_call,derived")
+
+    from benchmarks import online
+    with Timer() as t:
+        on = online.run(quick=True)
+    print(f"smoke_online,{t.us:.0f},"
+          f"vs_best_fixed_steady={on['online_vs_best_fixed_steady']:.3f}")
+    assert on["online"]["time_to_converge_steps"] is not None, \
+        "online tuner never converged"
+
+    from benchmarks import sweep
+    with Timer() as t:
+        sw = sweep.run(quick=True)
+    err = max(v["max_rel_err"] for v in sw.values())
+    print(f"smoke_sweep,{t.us:.0f},max_rel_err={err:.1e}")
+    assert err < 1e-6, "batched sweep diverged from the loop oracle"
+
+    from benchmarks import traffic
+    with Timer() as t:
+        tr = traffic.run(quick=True)
+    print(f"smoke_traffic,{t.us:.0f},"
+          f"vs_best_fixed_steady={tr['online_vs_best_fixed_steady']:.3f};"
+          f"token_identical={tr['token_parity']['token_identical']}")
+    assert tr["token_parity"]["token_identical"], \
+        "batched decode diverged from per-request generate"
+    assert tr["requests"]["completed"] > 0, "no traffic completed"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="subset of apps/steps (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape smoke of online/sweep/traffic only "
+                         "(benchmark bit-rot check for CI)")
     args = ap.parse_args(argv)
     q = args.quick
+    if args.smoke:
+        smoke()
+        return
 
     print("name,us_per_call,derived")
 
@@ -71,6 +109,14 @@ def main(argv=None) -> None:
           f"vs_best_fixed_steady={on['online_vs_best_fixed_steady']:.3f};"
           f"converge_steps={on['online']['time_to_converge_steps']};"
           f"cycles={on['online']['tune_cycles']}")
+
+    from benchmarks import traffic
+    with Timer() as t:
+        tr = traffic.run(quick=q)
+    print(f"traffic_sched,{t.us:.0f},"
+          f"vs_best_fixed_steady={tr['online_vs_best_fixed_steady']:.3f};"
+          f"token_identical={tr['token_parity']['token_identical']};"
+          f"completed={tr['requests']['completed']}")
 
     from benchmarks import roofline
     with Timer() as t:

@@ -1,0 +1,184 @@
+"""Traffic benchmark: the scheduler-fed online tuner vs a brute-force
+fixed-period sweep, on a Poisson arrival stream whose mix shifts mid-run.
+
+Phase A serves zipf random-retrieval requests (long-period friendly),
+phase B drifting attention-sink requests (short-period friendly); all
+requests share one HBM slot pool through ``serve.sched``.  Reports:
+
+  * end-state (final-window) modeled cost of the online run vs every
+    fixed period -- the acceptance bar is online <= 1.05x the best fixed;
+  * the token-parity check: a multi-request ``ContinuousBatcher`` decode
+    over ``SharedPagedPools`` must emit token-identical output to
+    per-request ``generate`` for the same prompts/keys, and the paged-
+    attention kernel gathering a request's context from the shared HBM
+    pool must match the host-pool reference.
+
+    PYTHONPATH=src python -m benchmarks.traffic [--quick]
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import OnlineTuner, shifting_mix_stream
+from repro.memtier import SharedPagedPools, TierConfig, TieringManager
+from repro.serve.sched import TrafficMonitor, TrafficScheduler
+
+N_LOGICAL, HBM_PAGES, PAGE = 256, 32, 16
+MAX_ACTIVE = 8
+RATE = 0.10
+FIXED = (1, 2, 4, 8, 16, 32, 64, 200)
+STEADY_WINDOW = 150
+
+
+def _stream(phase_steps: int, seed: int = 0):
+    return shifting_mix_stream(
+        [(phase_steps, RATE, {"random": 1.0}),
+         (phase_steps, RATE, {"sink": 1.0})],
+        prompt_len=(16, 48), new_tokens=(40, 100), seed=seed)
+
+
+def _run(specs, steps: int, *, period: int = 8,
+         tuner: Optional[OnlineTuner] = None, probe_at: Optional[int] = None):
+    """Replay one stream; returns (scheduler, manager, tuner,
+    modeled_time at ``probe_at``) -- the probe turns one run into an exact
+    final-window cost, the replays being deterministic."""
+    pools = SharedPagedPools.create(N_LOGICAL, HBM_PAGES)
+    mgr = TieringManager(N_LOGICAL, TierConfig(
+        page_size=PAGE, hbm_pages=HBM_PAGES, period_steps=period))
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr, tuner),
+                             page_size=PAGE, max_active=MAX_ACTIVE)
+    probe = 0.0
+    for t in range(steps):
+        if t == probe_at:
+            probe = mgr.modeled_time
+        sched.step()
+    return sched, mgr, tuner, probe
+
+
+def run(quick: bool = False) -> Dict:
+    phase = 400 if quick else 700
+    steps = 2 * phase
+    lo = steps - STEADY_WINDOW
+    specs = _stream(phase)
+
+    tuner = OnlineTuner(N_LOGICAL, default_period=8,
+                        drift_ratio=1.5, drift_patience=3)
+    sched, mgr, tuner, probe = _run(specs, steps, tuner=tuner, probe_at=lo)
+    online_steady = (mgr.modeled_time - probe) / STEADY_WINDOW
+
+    fixed = {}
+    for p in FIXED:
+        _, m, _, pr = _run(specs, steps, period=p, probe_at=lo)
+        fixed[str(p)] = {"total": m.modeled_time,
+                         "steady": (m.modeled_time - pr) / STEADY_WINDOW}
+    best_steady = min(v["steady"] for v in fixed.values())
+    best_total = min(v["total"] for v in fixed.values())
+
+    out = {
+        "steps": steps,
+        "requests": {"submitted": len(specs), "admitted": sched.admitted,
+                     "completed": sched.completed},
+        "online": {
+            "total": mgr.modeled_time,
+            "steady": online_steady,
+            "final_period": tuner.period,
+            "state": tuner.state,
+            "tune_cycles": tuner.retunes,
+            "period_history": tuner.history,
+        },
+        "fixed": fixed,
+        "online_vs_best_fixed_steady": online_steady / best_steady,
+        "online_vs_best_fixed_total": mgr.modeled_time / best_total,
+        "token_parity": _token_parity(quick),
+    }
+    save_json("traffic", out)
+    return out
+
+
+def _token_parity(quick: bool) -> Dict:
+    """Multi-request decode over SharedPagedPools == per-request generate,
+    and the paged kernel over the shared HBM pool == host-pool reference."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as C
+    from repro.kernels import ops
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 3 if quick else 4
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 10)))
+               .astype(np.int32) for _ in range(n_req)]
+    new_tokens = [int(rng.integers(4, 8)) for _ in range(n_req)]
+    keys = [jax.random.PRNGKey(100 + i) for i in range(n_req)]
+
+    page = 4
+    pools = SharedPagedPools.create(48, 16, page_size=page,
+                                    kv_heads=cfg.num_kv_heads,
+                                    head_dim=cfg.head_dim)
+    mgr = TieringManager(48, TierConfig(page_size=page, hbm_pages=16,
+                                        period_steps=2))
+    mon = TrafficMonitor(pools, mgr,
+                         OnlineTuner(48, default_period=2, profile_steps=8,
+                                     trial_steps=4))
+    batcher = ContinuousBatcher(params, cfg, max_active=2, max_len=32,
+                                page_size=page, monitor=mon,
+                                mirror_pages=True)
+    for i in range(n_req):
+        batcher.submit(Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=new_tokens[i], key=keys[i],
+                               temperature=0.7 if i % 2 else 0.0))
+    # after a few steps, validate the shared-pool paged gather path
+    for _ in range(3):
+        batcher.step()
+    kernel_diff = 0.0
+    if batcher.active:
+        req = next(iter(batcher.active.values()))
+        q = jax.random.normal(jax.random.PRNGKey(7),
+                              (1, cfg.num_heads, cfg.head_dim))
+        out, _ = batcher.paged_context(req.rid, q)
+        length = int(np.asarray(batcher.pos)[req.row])
+        n = -(-length // page)
+        tbl = jnp.asarray(req.gids[:n], jnp.int32)[None]
+        ref = ops.paged_attention(q, pools.k_host, pools.v_host, tbl,
+                                  jnp.asarray([length], jnp.int32),
+                                  impl="reference")
+        kernel_diff = float(jnp.abs(out - ref).max())
+    got = batcher.run()
+
+    matches = []
+    for i in range(n_req):
+        ref = np.asarray(generate(
+            params, cfg, jnp.asarray(prompts[i])[None],
+            steps=new_tokens[i], temperature=0.7 if i % 2 else 0.0,
+            key=keys[i]))[0].tolist()
+        matches.append(ref == got[i])
+    return {"requests": n_req, "token_identical": all(matches),
+            "paged_kernel_max_diff": kernel_diff,
+            "pages_all_released": pools.free_pages == pools.n_logical}
+
+
+if __name__ == "__main__":
+    r = run()
+    o = r["online"]
+    print(f"traffic: {r['requests']['completed']}/{r['requests']['submitted']}"
+          f" requests completed over {r['steps']} steps")
+    print(f"online: period={o['final_period']} ({o['state']}) after "
+          f"{o['tune_cycles']} tune cycles; steady {o['steady']:.2f}/step")
+    for p, v in r["fixed"].items():
+        print(f"    fixed {p:>3s}: steady {v['steady']:8.2f} total "
+              f"{v['total']:10.0f}")
+    print(f"online vs best fixed (steady): "
+          f"{r['online_vs_best_fixed_steady']:.3f}x "
+          f"(total {r['online_vs_best_fixed_total']:.3f}x)")
+    tp = r["token_parity"]
+    print(f"token parity: {tp['token_identical']} over {tp['requests']} "
+          f"requests; paged kernel max diff {tp['paged_kernel_max_diff']:.1e};"
+          f" pages released: {tp['pages_all_released']}")

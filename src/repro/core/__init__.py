@@ -22,16 +22,20 @@ from repro.core.sim import (SCHEDULERS, SimConfig, SimResult, TraceBins,
                             bin_trace, exhaustive_periods, simulate,
                             simulate_reference, sweep, sweep_loop)
 from repro.core.traces import TRACE_GENERATORS, Trace, available_traces, generate
+from repro.core.traffic import (RequestSpec, poisson_request_stream,
+                                shifting_mix_stream)
 
 __all__ = [
-    "AppStudy", "BASELINE_ORDERS", "CoriRun", "OnlineTuner", "ReuseHistogram",
+    "AppStudy", "BASELINE_ORDERS", "CoriRun", "OnlineTuner", "RequestSpec",
+    "ReuseHistogram",
     "SCHEDULERS", "SimConfig", "SimResult", "StreamingReuseCollector",
     "TRACE_GENERATORS", "Trace", "TraceBins",
     "Tuner", "TuneResult", "available_traces", "base_candidates",
     "baseline_trials", "baseline_trials_all", "bin_trace", "candidate_periods", "dominant_reuse",
     "exhaustive_periods", "generate", "loop_duration_histogram",
-    "optimal_runtime", "ordered_candidates", "prune_insignificant",
-    "reuse_distance_histogram",
+    "optimal_runtime", "ordered_candidates", "poisson_request_stream",
+    "prune_insignificant", "reuse_distance_histogram",
+    "shifting_mix_stream",
     "reuse_distances", "run_cori", "simulate", "simulate_reference", "study",
     "sweep", "sweep_loop", "table_i_periods_for", "table_i_runtimes",
     "trials_to_best",

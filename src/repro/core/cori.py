@@ -168,6 +168,12 @@ class OnlineTuner:
                regression beyond ``drift_ratio`` sustained for
                ``drift_patience`` consecutive windows means the workload
                changed phase -> reset the collector and re-enter PROFILE.
+               The detector is symmetric: a *sustained improvement* beyond
+               ``improve_ratio`` (cost below baseline/improve_ratio for
+               ``improve_patience`` windows) also re-profiles -- a cheaper
+               phase may admit an even better period than the one tuned
+               for the old, more expensive mix.  Set ``improve_ratio`` to
+               ``None`` to restore the regression-only detector.
 
     Cost windows (TRIAL and HOLD) are rounded up to a whole multiple of the
     period being measured, so every window contains the same number of
@@ -188,6 +194,8 @@ class OnlineTuner:
                  patience: int = 2, rel_tol: float = 0.01,
                  max_trials: Optional[int] = None,
                  drift_ratio: float = 1.3, drift_patience: int = 2,
+                 improve_ratio: Optional[float] = 2.0,
+                 improve_patience: Optional[int] = None,
                  bin_width: int = 1,
                  min_period: float = 1.0, access_threshold: float = 0.05,
                  max_candidates: int = 16, cost_log_len: int = 4096):
@@ -201,6 +209,9 @@ class OnlineTuner:
         self.max_trials = max_trials
         self.drift_ratio = drift_ratio
         self.drift_patience = drift_patience
+        self.improve_ratio = improve_ratio
+        self.improve_patience = (improve_patience if improve_patience
+                                 is not None else drift_patience)
         self.min_period = min_period
         self.access_threshold = access_threshold
         self.max_candidates = max_candidates
@@ -219,6 +230,7 @@ class OnlineTuner:
         self.cost_log: "collections.deque[float]" = collections.deque(
             maxlen=cost_log_len)
         self._drift_strikes = 0
+        self._improve_strikes = 0
         self._trial_idx = 0
         self._best_cost = np.inf
         self._best_period = self.period
@@ -325,6 +337,7 @@ class OnlineTuner:
             self.state = self.HOLD
             self.baseline_cost = None
             self._drift_strikes = 0
+            self._improve_strikes = 0
             self.retunes += 1
             self.converged_at = self.step
             self._set_period(self._best_period)
@@ -338,15 +351,38 @@ class OnlineTuner:
             self.baseline_cost = cost
         elif cost > self.drift_ratio * max(self.baseline_cost, 1e-12):
             self._drift_strikes += 1
+            self._improve_strikes = 0
             if self._drift_strikes >= self.drift_patience:
                 # sustained regression == workload phase change: stale
                 # reuse info is worse than none
-                self.collector.reset()
-                self.state = self.PROFILE
-                self._drift_strikes = 0
+                self._reprofile()
+        elif (self.improve_ratio is not None
+              and cost * self.improve_ratio < self.baseline_cost):
+            self._improve_strikes += 1
+            self._drift_strikes = 0
+            if self._improve_strikes >= self.improve_patience:
+                # sustained *improvement* is a phase change too: the new,
+                # cheaper mix may admit an even better period than the one
+                # tuned against the old mix
+                self._reprofile()
         else:
             self._drift_strikes = 0
+            self._improve_strikes = 0
         self._reset_window()
+
+    def _reprofile(self) -> None:
+        self.collector.reset()
+        self.state = self.PROFILE
+        self._drift_strikes = 0
+        self._improve_strikes = 0
+
+    # -- multi-request traffic hooks -----------------------------------------
+    def forget_pages(self, ids: np.ndarray) -> None:
+        """Invalidate freed logical page IDs in the reuse collector (see
+        ``StreamingReuseCollector.forget``): called by the serving scheduler
+        when a request retires, so a recycled global page ID does not pair
+        the new owner's first access with the old owner's last one."""
+        self.collector.forget(ids)
 
 
 def trials_to_best(runtimes_in_order: Sequence[float], tol: float = 0.005

@@ -159,6 +159,13 @@ class StreamingReuseCollector:
         h = loop_duration_histogram(gaps, bin_width=self.bin_width)
         return prune_insignificant(h, significance)
 
+    def forget(self, ids: np.ndarray) -> None:
+        """Invalidate specific pages (used when a logical page ID is freed
+        and may be recycled for a different request: a later access by the
+        new owner must not pair with the old owner's last access into a
+        bogus reuse gap).  Gaps already recorded stay -- they were real."""
+        self.last_access[np.asarray(ids, np.int64)] = -1
+
     def reset(self) -> None:
         """Forget all state (used when a phase change is detected)."""
         self.last_access.fill(-1)

@@ -1,0 +1,90 @@
+"""Serving-traffic request streams (the aggregate-workload generator).
+
+The paper tunes the movement period against one application's reuse; a
+serving system sees a *mix* of requests arriving over time, each with its
+own prompt length, output budget and KV access pattern.  This module
+generates those streams: Poisson arrivals per decode step, mixed
+prompt/output lengths, and a per-request workload ``kind`` naming the
+access pattern (resolved by the consumer -- ``repro.serve.sched`` maps
+kinds onto ``repro.memtier.workload`` mass generators).
+
+``poisson_request_stream`` generates one stationary phase; concatenate
+calls with different rates/mixes (``shifting_mix_stream``) to model the
+traffic-mix shifts the online tuner must survive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["RequestSpec", "poisson_request_stream", "shifting_mix_stream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """One request of a traffic stream (all lengths in tokens/steps)."""
+
+    rid: int
+    arrival: int                  # decode step the request arrives at
+    prompt_len: int
+    new_tokens: int               # output budget (retire on length)
+    kind: str                     # access-pattern name (consumer-resolved)
+    seed: int
+
+    def total_tokens(self, prefix_len: int = 0) -> int:
+        return prefix_len + self.prompt_len + self.new_tokens
+
+    def n_pages(self, page_size: int, prefix_len: int = 0) -> int:
+        """KV pages the request occupies (page-aligned allocation)."""
+        return -(-self.total_tokens(prefix_len) // page_size)
+
+
+def poisson_request_stream(steps: int, rate: float,
+                           kinds: Dict[str, float], *,
+                           prompt_len: Tuple[int, int] = (16, 64),
+                           new_tokens: Tuple[int, int] = (32, 128),
+                           start: int = 0, rid0: int = 0,
+                           seed: int = 0) -> List[RequestSpec]:
+    """One stationary traffic phase: per decode step, ``Poisson(rate)``
+    requests arrive; each draws its kind from the ``kinds`` weight map and
+    its prompt/output lengths uniformly from the given inclusive ranges.
+    Arrivals are offset by ``start`` and request ids by ``rid0`` so phases
+    concatenate cleanly."""
+    rng = np.random.default_rng(seed)
+    names = sorted(kinds)
+    w = np.asarray([kinds[k] for k in names], np.float64)
+    w = w / w.sum()
+    specs: List[RequestSpec] = []
+    rid = rid0
+    for t in range(steps):
+        for _ in range(int(rng.poisson(rate))):
+            specs.append(RequestSpec(
+                rid=rid, arrival=start + t,
+                prompt_len=int(rng.integers(prompt_len[0],
+                                            prompt_len[1] + 1)),
+                new_tokens=int(rng.integers(new_tokens[0],
+                                            new_tokens[1] + 1)),
+                kind=names[int(rng.choice(len(names), p=w))],
+                seed=int(rng.integers(0, 2 ** 31 - 1))))
+            rid += 1
+    return specs
+
+
+def shifting_mix_stream(phases: Sequence[Tuple[int, float, Dict[str, float]]],
+                        *, prompt_len: Tuple[int, int] = (16, 64),
+                        new_tokens: Tuple[int, int] = (32, 128),
+                        seed: int = 0) -> List[RequestSpec]:
+    """Concatenate stationary phases ``(steps, rate, kind_weights)`` into
+    one stream whose arrival mix shifts at each phase boundary -- the
+    workload the scheduler-fed online tuner is benchmarked against."""
+    specs: List[RequestSpec] = []
+    start = 0
+    for i, (steps, rate, kinds) in enumerate(phases):
+        specs.extend(poisson_request_stream(
+            steps, rate, kinds, prompt_len=prompt_len,
+            new_tokens=new_tokens, start=start, rid0=len(specs),
+            seed=seed + 7919 * i))
+        start += steps
+    return specs

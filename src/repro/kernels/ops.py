@@ -13,6 +13,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import page_hist as _ph
@@ -44,6 +45,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 @functools.partial(jax.jit, static_argnames=("impl",))
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
                     impl: str = "interpret"):
+    # Ragged multi-request tables pad short rows with -1; those entries are
+    # already masked out by `lengths`, so clamp them to a valid physical
+    # page before the gather (the Pallas index_map would otherwise DMA out
+    # of bounds, and the reference gather would wrap).  Precondition: a -1
+    # *inside* the `lengths` range means a non-resident page (slot_of ==
+    # -1) leaked into the table -- callers must ensure_resident first; the
+    # clamp cannot distinguish that from padding on traced values.
+    page_table = jnp.maximum(page_table, 0)
     if impl == "reference":
         return _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
                                         lengths)

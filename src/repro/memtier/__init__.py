@@ -13,10 +13,11 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import cori
-from repro.memtier.tiering import PagedPools, TierConfig, TieringManager
+from repro.memtier.tiering import (PagedPools, SharedPagedPools, TierConfig,
+                                   TieringManager)
 
-__all__ = ["PagedPools", "TierConfig", "TieringManager", "replay",
-           "online_replay", "cori_tune_period", "resident_mask",
+__all__ = ["PagedPools", "SharedPagedPools", "TierConfig", "TieringManager",
+           "replay", "online_replay", "cori_tune_period", "resident_mask",
            "interleaved_resident"]
 
 

@@ -30,7 +30,7 @@ import numpy as np
 from repro.core import cori, reuse
 from repro.kernels import ops
 
-__all__ = ["TierConfig", "TieringManager", "PagedPools"]
+__all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +73,175 @@ class PagedPools:
             slot_of=slot_of,
             page_of_slot=init.copy())
 
+    def touch_slots(self, slots: np.ndarray) -> None:
+        """No-op: the fixed single-request pool has no demand-fetch path,
+        so slot recency is meaningless here (SharedPagedPools tracks it)."""
+
 
 @jax.jit
 def _migrate(pool_hbm, pool_host, slots, logicals):
     """Copy host pages `logicals` into HBM `slots` (the move_pages analogue;
     on real hardware this is the pinned_host->device DMA)."""
     return pool_hbm.at[slots].set(pool_host[logicals])
+
+
+class SharedPagedPools:
+    """One HBM slot pool shared by *all* in-flight requests' KV pages.
+
+    The multi-request generalisation of ``PagedPools``: logical page IDs
+    live in one global space sized ``n_logical`` (the allocator's
+    capacity), requests allocate page-aligned runs at admission
+    (``alloc``) and return them at retirement (``free``, which also evicts
+    any HBM slots they held).  ``slot_of[gid]`` is the per-request
+    indirection the paged-attention kernel consumes: a request's page
+    table of global IDs maps to physical HBM slots via ``table``.
+
+    Two modes:
+      * physical -- ``create(..., like=...)`` allocates host/HBM arrays;
+        ``write_page`` mirrors KV data and ``ensure_resident`` demand-
+        fetches pages the kernel is about to gather.
+      * symbolic -- no arrays (``k_host is None``); only the residency and
+        allocation bookkeeping runs.  Used by the traffic simulator where
+        thousands of scheduler steps replay without touching KV bytes.
+
+    Unlike ``PagedPools`` (fixed single-request footprint, every slot
+    always occupied), slots here can be *free* (``page_of_slot == -1``)
+    after a retirement; ``TieringManager.maybe_tier`` fills free slots
+    before evicting residents.
+    """
+
+    def __init__(self, n_logical: int, hbm_pages: int, *,
+                 k_host=None, v_host=None, k_hbm=None, v_hbm=None):
+        if hbm_pages > n_logical:
+            raise ValueError("HBM slot pool larger than the logical space")
+        self.n_logical = int(n_logical)
+        self.hbm_pages = int(hbm_pages)
+        self.k_host, self.v_host = k_host, v_host
+        self.k_hbm, self.v_hbm = k_hbm, v_hbm
+        self.slot_of = np.full((n_logical,), -1, np.int32)
+        self.page_of_slot = np.full((hbm_pages,), -1, np.int32)
+        self.owner_of = np.full((n_logical,), -1, np.int64)
+        # free logical ids, popped lowest-first so reuse is deterministic
+        self._free_ids: List[int] = list(range(n_logical - 1, -1, -1))
+        # per-slot touch tick for the demand-fetch victim choice
+        self._slot_tick = np.zeros((hbm_pages,), np.int64)
+        self._tick = 0
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def create(cls, n_logical: int, hbm_pages: int, *,
+               page_size: Optional[int] = None, kv_heads: int = 0,
+               head_dim: int = 0, dtype=jnp.float32) -> "SharedPagedPools":
+        """Physical pools when page geometry is given, symbolic otherwise."""
+        if page_size is None:
+            return cls(n_logical, hbm_pages)
+        shape = (n_logical, page_size, kv_heads, head_dim)
+        hshape = (hbm_pages,) + shape[1:]
+        return cls(n_logical, hbm_pages,
+                   k_host=jnp.zeros(shape, dtype),
+                   v_host=jnp.zeros(shape, dtype),
+                   k_hbm=jnp.zeros(hshape, dtype),
+                   v_hbm=jnp.zeros(hshape, dtype))
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def physical(self) -> bool:
+        return self.k_host is not None
+
+    @property
+    def resident_mask(self) -> np.ndarray:
+        return self.slot_of >= 0
+
+    @property
+    def allocated_mask(self) -> np.ndarray:
+        return self.owner_of >= 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_ids)
+
+    def free_slots(self) -> np.ndarray:
+        return np.nonzero(self.page_of_slot < 0)[0].astype(np.int32)
+
+    def table(self, gids: np.ndarray) -> np.ndarray:
+        """Physical HBM slot per global page ID (-1 = host-only)."""
+        return self.slot_of[np.asarray(gids, np.int64)]
+
+    # -- allocator -----------------------------------------------------------
+    def alloc(self, n_pages: int, owner: int) -> Optional[np.ndarray]:
+        """Allocate `n_pages` global page IDs for request `owner`; None when
+        the logical space cannot fit the request (caller queues it)."""
+        if n_pages > len(self._free_ids):
+            return None
+        gids = np.asarray([self._free_ids.pop() for _ in range(n_pages)],
+                          np.int64)
+        self.owner_of[gids] = owner
+        return gids
+
+    def free(self, gids: np.ndarray) -> None:
+        """Return a retired request's pages; their HBM slots become free."""
+        gids = np.asarray(gids, np.int64)
+        slots = self.slot_of[gids]
+        held = slots[slots >= 0]
+        self.page_of_slot[held] = -1
+        self.slot_of[gids] = -1
+        self.owner_of[gids] = -1
+        self._free_ids.extend(sorted(gids.tolist(), reverse=True))
+
+    # -- physical data path --------------------------------------------------
+    def write_page(self, gid: int, k_page, v_page) -> None:
+        """Write one logical page's KV data (host copy; mirrored to the HBM
+        slot when resident, the write-through of a decode-step append)."""
+        if not self.physical:
+            return
+        self.k_host = self.k_host.at[gid].set(k_page)
+        self.v_host = self.v_host.at[gid].set(v_page)
+        slot = int(self.slot_of[gid])
+        if slot >= 0:
+            self.k_hbm = self.k_hbm.at[slot].set(k_page)
+            self.v_hbm = self.v_hbm.at[slot].set(v_page)
+
+    def touch_slots(self, slots: np.ndarray) -> None:
+        """Mark slots recently-used for the demand-fetch victim choice
+        (called by the tiering pass so freshly-migrated hot pages are not
+        the first LRU victims)."""
+        self._tick += 1
+        self._slot_tick[np.asarray(slots, np.int64)] = self._tick
+
+    def ensure_resident(self, gids: np.ndarray) -> int:
+        """Demand-fetch: make every page in `gids` HBM-resident (free slots
+        first, then evict the least-recently-ensured resident outside
+        `gids`).  Returns the number of pages fetched -- the caller charges
+        them as misses.  Raises if `gids` alone exceed the slot pool."""
+        gids = np.asarray(gids, np.int64)
+        if gids.size > self.hbm_pages:
+            raise ValueError(f"{gids.size} pages cannot fit the "
+                             f"{self.hbm_pages}-slot HBM pool")
+        self._tick += 1
+        missing = gids[self.slot_of[gids] < 0]
+        # slot choice is sequential (each fetch consumes a slot), but the
+        # device copies batch into one gather/scatter per pool
+        slots: List[int] = []
+        for gid in missing.tolist():
+            free = np.nonzero(self.page_of_slot < 0)[0]
+            if free.size:
+                slot = int(free[0])
+            else:
+                prot = np.zeros(self.hbm_pages, bool)
+                prot[self.slot_of[gids[self.slot_of[gids] >= 0]]] = True
+                victims = np.nonzero(~prot)[0]
+                slot = int(victims[np.argmin(self._slot_tick[victims])])
+                self.slot_of[self.page_of_slot[slot]] = -1
+            self.slot_of[gid] = slot
+            self.page_of_slot[slot] = gid
+            slots.append(slot)
+        if self.physical and slots:
+            self.k_hbm = _migrate(self.k_hbm, self.k_host,
+                                  jnp.asarray(slots), jnp.asarray(missing))
+            self.v_hbm = _migrate(self.v_hbm, self.v_host,
+                                  jnp.asarray(slots), jnp.asarray(missing))
+        self._slot_tick[self.slot_of[gids]] = self._tick
+        return int(missing.size)
 
 
 class TieringManager:
@@ -137,59 +300,103 @@ class TieringManager:
         self.step += 1
         self._since_tier += 1
 
+    # -- multi-request bookkeeping -------------------------------------------
+    def release(self, ids: np.ndarray) -> None:
+        """Forget retired pages (a request left the system): their hotness
+        must not keep dead logical IDs ranked into the working set, and a
+        recycled ID must start cold.  The bounded ``access_log`` is left
+        as-is -- it feeds the offline histogram flow only, which the
+        multi-request scheduler does not use (it reads reuse from the
+        OnlineTuner's collector, which gets its own ``forget``)."""
+        ids = np.asarray(ids, np.int64)
+        self.hotness[ids] = 0.0
+        self.counts_since_tier[ids] = 0.0
+        self.last_access[ids] = -1.0
+
     # -- the page scheduler (paper SII-B swap rule) --------------------------
-    def _rank_desired(self, resident: np.ndarray) -> np.ndarray:
+    def _rank_desired(self, resident: np.ndarray,
+                      active: Optional[np.ndarray] = None) -> np.ndarray:
         """EMA-update hotness and rank the desired working set (the paper's
-        swap rule): hotness primary, recency secondary, residency tertiary."""
+        swap rule): hotness primary, recency secondary, residency tertiary.
+        With an ``active`` mask (multi-request mode) only allocated pages
+        are rankable, so the desired set may be smaller than capacity."""
         a = self.cfg.ema_alpha
         self.hotness = a * self.counts_since_tier + (1 - a) * self.hotness
         self.counts_since_tier[:] = 0.0
         score = (self.hotness * 1e6
                  + (self.last_access + 1) / (self.step + 1)
                  + 0.5 * resident)
-        desired = np.argsort(-score, kind="stable")[: self.cfg.hbm_pages]
         desired_set = np.zeros(self.n, bool)
+        if active is None:
+            desired = np.argsort(-score, kind="stable")[: self.cfg.hbm_pages]
+        else:
+            ids = np.nonzero(active)[0]
+            order = np.argsort(-score[ids], kind="stable")
+            desired = ids[order[: self.cfg.hbm_pages]]
         desired_set[desired] = True
         return desired_set
 
-    def maybe_tier(self, pools: PagedPools) -> PagedPools:
+    def _plan_swaps(self, resident: np.ndarray, desired_set: np.ndarray,
+                    n_free: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(bring, evict) realising the desired set: fill free capacity
+        first, then evict lazily (a resident-but-undesired page costs
+        nothing to keep and can only save future misses).  Because the
+        desired set never exceeds capacity, every desired page is brought
+        in.  ``n_free == 0`` reduces to the classic paired-swap rule."""
+        bring = np.nonzero(desired_set & ~resident)[0]
+        evict = np.nonzero(resident & ~desired_set)[0]
+        n_bring = min(len(bring), n_free + len(evict))
+        n_evict = max(0, n_bring - n_free)
+        return bring[:n_bring], evict[:n_evict]
+
+    def maybe_tier(self, pools: PagedPools,
+                   active: Optional[np.ndarray] = None) -> PagedPools:
         if self.step == 0 or not self._tier_due():
             return pools
         cfg = self.cfg
         resident = pools.slot_of >= 0
-        desired_set = self._rank_desired(resident)
-        evict = np.nonzero(resident & ~desired_set)[0]
-        bring = np.nonzero(desired_set & ~resident)[0]
-        n_mig = min(len(evict), len(bring))
-        evict, bring = evict[:n_mig], bring[:n_mig]
+        desired_set = self._rank_desired(resident, active)
+        free_slots = np.nonzero(pools.page_of_slot < 0)[0]
+        bring, evict = self._plan_swaps(resident, desired_set,
+                                        len(free_slots))
+        n_mig = len(bring)
         if n_mig:
-            slots = pools.slot_of[evict].copy()
+            slots = np.concatenate([
+                free_slots[: n_mig - len(evict)],
+                pools.slot_of[evict]]).astype(pools.slot_of.dtype)
             pools.slot_of[evict] = -1
             pools.slot_of[bring] = slots
             pools.page_of_slot[slots] = bring
-            pools = dataclasses.replace(
-                pools,
-                k_hbm=_migrate(pools.k_hbm, pools.k_host, jnp.asarray(slots),
-                               jnp.asarray(bring)),
-                v_hbm=_migrate(pools.v_hbm, pools.v_host, jnp.asarray(slots),
-                               jnp.asarray(bring)))
+            pools.touch_slots(slots)   # shared pools track slot recency
+            if pools.k_host is not None:
+                pools.k_hbm = _migrate(pools.k_hbm, pools.k_host,
+                                       jnp.asarray(slots), jnp.asarray(bring))
+                pools.v_hbm = _migrate(pools.v_hbm, pools.v_host,
+                                       jnp.asarray(slots), jnp.asarray(bring))
         self.migrations += int(n_mig)
+        # 2x = the k page + the v page per migration; evictions move no
+        # data (the host copy is write-through, dropping a slot is free)
         self.data_moved_pages += 2 * int(n_mig)
         self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
         return pools
 
-    def maybe_tier_symbolic(self, resident: np.ndarray) -> bool:
+    def maybe_tier_symbolic(self, resident: np.ndarray,
+                            active: Optional[np.ndarray] = None) -> bool:
         """Tiering over symbolic residency (no physical pools): same swap
-        rule and accounting as ``maybe_tier``, used for fast period trials.
-        Mutates ``resident`` in place; returns whether a tier happened."""
+        rule and accounting as ``maybe_tier``, used for fast period trials
+        and the traffic simulator.  Mutates ``resident`` in place; returns
+        whether a tier happened."""
         if self.step == 0 or not self._tier_due():
             return False
-        desired_set = self._rank_desired(resident)
-        n_mig = int((desired_set & ~resident).sum())
+        desired_set = self._rank_desired(resident, active)
+        n_free = self.cfg.hbm_pages - int(resident.sum())
+        bring, evict = self._plan_swaps(resident, desired_set, n_free)
+        n_mig = len(bring)
         self.migrations += n_mig
         self.data_moved_pages += 2 * n_mig
         self.modeled_time += n_mig * self.cfg.mig_cost + self.cfg.wakeup_cost
-        resident[:] = desired_set
+        resident[evict] = False
+        resident[bring] = True
         return True
 
     # -- Cori integration ----------------------------------------------------

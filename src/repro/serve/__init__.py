@@ -1,0 +1,18 @@
+"""Serving layer: generation engine + continuous-batching scheduler.
+
+``engine`` holds the single-stream paths (``generate`` /
+``monitored_generate``); ``sched`` is the traffic layer -- a
+``ContinuousBatcher`` admitting and retiring requests mid-flight over one
+shared HBM page pool, feeding the online Cori tuner from the aggregate
+mix (see docs/serving.md).
+"""
+from repro.serve.engine import (generate, make_monitor, monitor_slot,
+                                monitored_generate, page_mass_from_attention)
+from repro.serve.sched import (ContinuousBatcher, Request, TrafficMonitor,
+                               TrafficScheduler, WORKLOAD_KINDS)
+
+__all__ = [
+    "ContinuousBatcher", "Request", "TrafficMonitor", "TrafficScheduler",
+    "WORKLOAD_KINDS", "generate", "make_monitor", "monitor_slot",
+    "monitored_generate", "page_mass_from_attention",
+]

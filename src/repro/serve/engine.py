@@ -21,7 +21,8 @@ from repro.models import layers as L
 from repro.models import model as mdl
 from repro.models.config import ModelConfig, parse_kind
 
-__all__ = ["generate", "monitored_generate", "page_mass_from_attention"]
+__all__ = ["generate", "monitored_generate", "page_mass_from_attention",
+           "make_monitor", "monitor_slot"]
 
 
 def _sample(logits, key, temperature: float):
@@ -57,7 +58,7 @@ def generate(params, cfg: ModelConfig, prompt_tokens, steps: int, *,
     return jnp.concatenate(out, axis=1)
 
 
-def _monitor_slot(cfg: ModelConfig) -> Tuple[int, int]:
+def monitor_slot(cfg: ModelConfig) -> Tuple[int, int]:
     """Pick the deepest full-attention slot as the monitor layer."""
     best = None
     for si, (pattern, _) in enumerate(cfg.segments):
@@ -72,9 +73,11 @@ def _monitor_slot(cfg: ModelConfig) -> Tuple[int, int]:
 
 
 def page_mass_from_attention(q, k, cache_pos, cur_pos, page_size: int,
-                             n_pages: int, theta: float):
+                             n_pages: int):
     """Attention-probability mass per KV page for the monitor layer.
-    q/k: [B,1|T,KV_or_H,D]; returns f32[n_pages] (max over batch)."""
+    q/k: [B,1|T,KV_or_H,D]; returns f32[B, n_pages] (per request -- the
+    multi-request scheduler scatters each row into the global page-ID
+    space; single-stream callers reduce over the batch axis themselves)."""
     d = q.shape[-1]
     rep = q.shape[2] // k.shape[2]
     kr = jnp.repeat(k, rep, axis=2)
@@ -94,7 +97,35 @@ def page_mass_from_attention(q, k, cache_pos, cur_pos, page_size: int,
     page_of = jnp.where(cache_pos >= 0, cache_pos // page_size, n_pages)
     mass = jnp.zeros((mass_tok.shape[0], n_pages + 1), jnp.float32)
     mass = mass.at[jnp.arange(mass.shape[0])[:, None], page_of].add(mass_tok)
-    return mass[:, :n_pages].max(axis=0)
+    return mass[:, :n_pages]
+
+
+def make_monitor(params, cfg: ModelConfig, page_size: int, n_pages: int):
+    """Jitted per-step monitor: (cache, tok, pos) -> f32[B, n_pages].
+
+    Recomputes the query of the designated monitor layer for the pending
+    token and returns each request's attention mass per KV page -- the
+    "accessed bits" feed shared by ``monitored_generate`` (single stream,
+    reduced over batch) and ``repro.serve.sched.ContinuousBatcher``
+    (per-request rows merged into the global page table)."""
+    si, sj = monitor_slot(cfg)
+    # monitor params of the LAST repeat of the chosen slot
+    slot_p = jax.tree.map(lambda a: a[-1], params["segments"][si][sj])
+
+    def monitor(cache, tok, pos):
+        c = cache["segments"][si][sj]
+        k = c["k"][-1]                          # [B,T,KV,D]
+        x = L.embed(params["embed"], cfg, tok)
+        h = L.rms_norm(x, slot_p["norm1"])
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       slot_p["attn"]["wq"].astype(h.dtype))
+        if cfg.qk_norm:
+            q = L.rms_norm(q, slot_p["attn"]["q_norm"])
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        return page_mass_from_attention(q, k, c["pos"][-1], pos, page_size,
+                                        n_pages)
+
+    return jax.jit(monitor)
 
 
 def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
@@ -113,7 +144,6 @@ def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
     prefix = cfg.prefix_len or 0
     max_len = plen + prefix + steps
     n_pages = -(-max_len // page_size)
-    si, sj = _monitor_slot(cfg)
     key = key if key is not None else jax.random.PRNGKey(0)
 
     logits, cache = mdl.prefill(params, cfg, prompt_tokens, cond=cond,
@@ -123,27 +153,11 @@ def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
     tok = _sample(logits[:, 0], key, temperature)[:, None]
     out, masses = [tok], []
 
-    # monitor params of the LAST repeat of the chosen slot
-    slot_p = jax.tree.map(lambda a: a[-1],
-                          params["segments"][si][sj])
-
-    def monitor(cache, tok, pos):
-        c = cache["segments"][si][sj]
-        k = c["k"][-1]                          # [B,T,KV,D]
-        x = L.embed(params["embed"], cfg, tok)
-        h = L.rms_norm(x, slot_p["norm1"])
-        q = jnp.einsum("bsd,dhk->bshk", h, slot_p["attn"]["wq"].astype(h.dtype))
-        if cfg.qk_norm:
-            q = L.rms_norm(q, slot_p["attn"]["q_norm"])
-        q = L.rope(q, pos[:, None], cfg.rope_theta)
-        return page_mass_from_attention(q, k, c["pos"][-1], pos, page_size,
-                                        n_pages, cfg.rope_theta)
-
     step_fn = jax.jit(lambda c, t, p: mdl.decode_step(params, cfg, c, t, p,
                                                       cond=cond))
-    mon_fn = jax.jit(monitor)
+    mon_fn = make_monitor(params, cfg, page_size, n_pages)
     for i in range(steps - 1):
-        masses.append(np.asarray(mon_fn(cache, tok, pos)))
+        masses.append(np.asarray(mon_fn(cache, tok, pos)).max(axis=0))
         if on_mass is not None:
             on_mass(i, masses[-1])
         logits, cache = step_fn(cache, tok, pos)

@@ -1,0 +1,449 @@
+"""Continuous-batching serving scheduler over one shared KV page pool.
+
+The paper's tuner wants the *aggregate* workload, not one request: this
+module is the layer that owns a shared hybrid-memory pool across many
+in-flight requests and feeds online Cori from the merged traffic.
+
+  * ``ContinuousBatcher`` -- the model-backed scheduler: requests join the
+    running batch between decode steps (admission is per-step, and each
+    request's KV occupies whole pages of the shared pool, so joins are
+    page-aligned by construction), decode runs over the whole request
+    set, and requests retire on EOS or length, returning their pages.
+  * ``TrafficScheduler`` -- the model-free twin for traffic simulation:
+    each request is a synthetic per-step page-mass pattern
+    (``repro.memtier.workload``), so thousands of scheduler steps replay
+    without touching KV bytes.  Same admission, allocation, merge and
+    retirement path.
+  * ``TrafficMonitor`` -- the traffic-level monitor: merges per-request
+    page masses into the global logical-page ID space and drives ONE
+    ``TieringManager`` (+ optional ``OnlineTuner``) for the whole mix.
+
+Global page IDs are allocated by ``memtier.SharedPagedPools``; a retiring
+request's IDs are released everywhere (pool slots, manager hotness, the
+tuner's reuse collector) so a recycled ID starts cold.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cori
+from repro.core.traffic import RequestSpec
+from repro.kernels import ops
+from repro.memtier import workload as W
+from repro.memtier.tiering import SharedPagedPools, TieringManager
+from repro.models import model as mdl
+from repro.serve import engine as E
+
+__all__ = ["Request", "TrafficMonitor", "ContinuousBatcher",
+           "TrafficScheduler", "WORKLOAD_KINDS"]
+
+
+# ---------------------------------------------------------------------------
+# traffic-level monitor: merged masses -> one manager/tuner
+# ---------------------------------------------------------------------------
+
+
+class TrafficMonitor:
+    """Merges per-request page masses into the global page-ID space and
+    feeds one ``TieringManager`` + optional ``OnlineTuner`` for the whole
+    traffic mix -- the aggregation point between the scheduler and Cori."""
+
+    def __init__(self, pools: SharedPagedPools, manager: TieringManager,
+                 tuner: Optional[cori.OnlineTuner] = None):
+        if manager.n != pools.n_logical:
+            raise ValueError("manager and pools disagree on the logical "
+                             f"page space ({manager.n} vs {pools.n_logical})")
+        self.pools = pools
+        self.manager = manager
+        self.tuner = tuner
+
+    def merge(self, contributions: Sequence[Tuple[np.ndarray, np.ndarray]]
+              ) -> np.ndarray:
+        """Scatter per-request (gids, local_mass) rows into one global
+        f32[n_logical] mass vector (max-merge: a page is as hot as its
+        hottest accessor, matching the engine's batch reduction)."""
+        mass = np.zeros(self.pools.n_logical, np.float32)
+        for gids, local in contributions:
+            np.maximum.at(mass, np.asarray(gids, np.int64),
+                          np.asarray(local, np.float32)[: len(gids)])
+        return mass
+
+    def on_step(self, global_mass: np.ndarray,
+                n_active: Optional[int] = None) -> int:
+        """Feed one scheduler step's merged masses: accounting, periodic
+        tiering over the shared pool, and the closed tuning loop.  Returns
+        the tiering period now in force.
+
+        With ``n_active`` the tuner is fed the *per-request* step cost.
+        Aggregate cost scales with however many requests happen to be in
+        flight, so a burst of arrivals (or a drain of retirements) looks
+        exactly like workload drift and makes the tuner churn through
+        re-profiles on a perfectly stable mix; per-request cost is the
+        load-invariant serving metric the drift detector should watch."""
+        mgr = self.manager
+        before = mgr.modeled_time
+        mgr.on_step(global_mass, self.pools.resident_mask)
+        mgr.maybe_tier(self.pools, active=self.pools.allocated_mask)
+        if self.tuner is not None:
+            cost = mgr.modeled_time - before
+            if n_active is not None:
+                cost /= max(1, n_active)
+            mgr.set_period(self.tuner.on_step(global_mass, cost=cost))
+        return mgr.period
+
+    def release(self, gids: np.ndarray) -> None:
+        """Retire a request's pages everywhere: pool slots freed, manager
+        hotness cleared, reuse-collector entries invalidated (a recycled
+        global ID must not inherit the old owner's reuse chain)."""
+        self.manager.release(gids)
+        if self.tuner is not None:
+            self.tuner.forget_pages(gids)
+        self.pools.free(gids)
+
+
+# ---------------------------------------------------------------------------
+# model-backed continuous batcher
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its in-flight state."""
+
+    rid: int
+    prompt: np.ndarray                 # int32[plen]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    key: Optional[jax.Array] = None    # defaults to PRNGKey(0), as generate()
+    # -- runtime state (owned by the batcher) --
+    row: int = -1
+    gids: Optional[np.ndarray] = None
+    n_pages: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    _key: Optional[jax.Array] = None
+    _i: int = 0                        # decode iterations done
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+
+class ContinuousBatcher:
+    """Continuous batching: a fixed-capacity request-set decoded together.
+
+    ``max_active`` rows share one packed cache of ``max_len`` positions;
+    requests are admitted into free rows between decode steps (their KV
+    pages allocated from the shared pool at page-aligned positions) and
+    retired on EOS or length (pages released).  Per-request sampling keys
+    follow exactly ``engine.generate``'s schedule, so a request's token
+    stream is identical to running ``generate`` alone with the same
+    prompt/key -- the property the traffic benchmark pins down.
+
+    With a ``TrafficMonitor``, each step recomputes the monitor layer's
+    per-request page masses (``engine.make_monitor``), merges them into
+    the global page-ID space, and lets the manager/tuner tier the shared
+    pool; with ``mirror_pages=True`` (physical pools) the monitor layer's
+    KV pages are write-through mirrored so ``kernels.paged_attention``
+    can gather a request's context straight from the shared HBM pool
+    (``paged_context``).
+    """
+
+    def __init__(self, params, cfg, *, max_active: int = 4,
+                 max_len: int = 128, page_size: int = 16,
+                 monitor: Optional[TrafficMonitor] = None,
+                 mirror_pages: bool = False):
+        self.params, self.cfg = params, cfg
+        self.page_size = page_size
+        self.max_len = -(-max_len // page_size) * page_size
+        self.max_active = max_active
+        self.prefix = cfg.prefix_len or 0
+        self.monitor = monitor
+        self.mirror_pages = mirror_pages and monitor is not None \
+            and monitor.pools.physical
+        self.n_row_pages = self.max_len // page_size
+
+        # prefill produces float32 caches on this substrate; the packed
+        # cache must match or row writes would silently downcast
+        self.cache = mdl.init_cache(cfg, max_active, self.max_len,
+                                    dtype=jnp.float32)
+        self.tok = jnp.zeros((max_active, 1), jnp.int32)
+        self.pos = jnp.zeros((max_active,), jnp.int32)
+        self.rows_free = list(range(max_active - 1, -1, -1))
+        self.active: Dict[int, Request] = {}
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.step_idx = 0
+        self.completed: List[Request] = []
+
+        self._step_fn = jax.jit(
+            lambda c, t, p: mdl.decode_step(params, cfg, c, t, p))
+        self._mon_fn = (E.make_monitor(params, cfg, page_size,
+                                       self.n_row_pages)
+                        if monitor is not None else None)
+        if self.monitor is not None:
+            self._si, self._sj = E.monitor_slot(cfg)
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if self.prefix + req.total_len > self.max_len:
+            raise ValueError(f"request {req.rid} needs "
+                             f"{self.prefix + req.total_len} positions, "
+                             f"cache rows hold {self.max_len}")
+        if self.monitor is not None:
+            n_pages = -(-(self.prefix + req.total_len) // self.page_size)
+            if n_pages > self.monitor.pools.n_logical:
+                # would head-of-line-block the queue forever: alloc can
+                # never succeed, not even with the pool fully drained
+                raise ValueError(
+                    f"request {req.rid} needs {n_pages} pages, the logical "
+                    f"space holds {self.monitor.pools.n_logical}")
+        self.queue.append(req)
+
+    def _admit(self) -> List[Tuple[int, int]]:
+        emitted: List[Tuple[int, int]] = []
+        while self.queue and self.rows_free:
+            req = self.queue[0]
+            n_pages = -(-(self.prefix + req.total_len) // self.page_size)
+            gids = None
+            if self.monitor is not None:
+                gids = self.monitor.pools.alloc(n_pages, req.rid)
+                if gids is None:       # head-of-line: keep arrival order
+                    return emitted
+            self.queue.popleft()
+            row = self.rows_free.pop()
+            req.row, req.gids, req.n_pages = row, gids, n_pages
+
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache1 = mdl.prefill(self.params, self.cfg, prompt)
+            cache1 = mdl.pad_cache(cache1, self.cfg, self.max_len)
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, row].set(one[:, 0]),
+                self.cache, cache1)
+            req._key = req.key if req.key is not None else jax.random.PRNGKey(0)
+            tok = E._sample(logits[:, 0], req._key, req.temperature)
+            req.tokens.append(int(tok[0]))
+            emitted.append((req.rid, int(tok[0])))
+            self.tok = self.tok.at[row].set(tok)
+            self.pos = self.pos.at[row].set(self.prefix + len(req.prompt))
+            self.active[row] = req
+            if self.mirror_pages:
+                plen = self.prefix + len(req.prompt)
+                self._mirror(req, range(-(-plen // self.page_size)))
+            if req.max_new_tokens <= 1 or (req.eos_id is not None
+                                           and req.tokens[-1] == req.eos_id):
+                self._retire(req)
+        return emitted
+
+    # -- the per-step scheduler loop -----------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler step: admit, monitor+tier, decode the request set,
+        sample, retire.  Returns the (rid, token) pairs emitted this step,
+        including the prefill-sampled first token of newly admitted
+        requests."""
+        emitted = self._admit()
+        self.step_idx += 1
+        if not self.active:
+            return emitted
+        if self.monitor is not None:
+            masses = np.asarray(self._mon_fn(self.cache, self.tok, self.pos))
+            merged = self.monitor.merge(
+                [(r.gids[: r.n_pages], masses[r.row, : r.n_pages])
+                 for r in self.active.values()])
+            self.monitor.on_step(merged, n_active=len(self.active))
+
+        pos_before = np.asarray(self.pos)
+        logits, self.cache = self._step_fn(self.cache, self.tok, self.pos)
+        self.pos = self.pos + 1
+        new_tok = self.tok
+        for row, req in list(self.active.items()):
+            req._key = jax.random.fold_in(req._key, req._i)
+            req._i += 1
+            tok = E._sample(logits[row: row + 1, 0], req._key,
+                            req.temperature)
+            req.tokens.append(int(tok[0]))
+            new_tok = new_tok.at[row].set(tok)
+            emitted.append((req.rid, int(tok[0])))
+            if self.mirror_pages:
+                self._mirror(req, [int(pos_before[row]) // self.page_size])
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and req.tokens[-1] == req.eos_id)):
+                self._retire(req)
+        self.tok = new_tok
+        return emitted
+
+    def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:
+        """Drive until every submitted request completed (or the step
+        budget runs out).  Returns rid -> emitted tokens."""
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {r.rid: list(r.tokens) for r in self.completed}
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        del self.active[req.row]
+        self.rows_free.append(req.row)
+        self.completed.append(req)
+        if self.monitor is not None:
+            self.monitor.release(req.gids)
+
+    # -- shared-pool data path -----------------------------------------------
+    def _mirror(self, req: Request, pages) -> None:
+        """Write-through the monitor layer's KV pages of one request from
+        the packed cache into the shared pools (host + resident slots)."""
+        c = self.cache["segments"][self._si][self._sj]
+        ps = self.page_size
+        for p in pages:
+            if 0 <= p < req.n_pages:
+                # slice on device: only the touched page crosses to host
+                k = c["k"][-1, req.row, p * ps: (p + 1) * ps]
+                v = c["v"][-1, req.row, p * ps: (p + 1) * ps]
+                self.monitor.pools.write_page(int(req.gids[p]), k, v)
+
+    def paged_context(self, rid: int, q, *, impl: str = "interpret"):
+        """Monitor-layer attention context for one in-flight request,
+        gathered by ``kernels.paged_attention`` *from the shared HBM pool*
+        through the request's page table (``slot_of`` indirection).  Pages
+        are demand-fetched first; returns (context [1,H,D], fetched)."""
+        if not self.mirror_pages:
+            raise ValueError("paged_context needs mirror_pages=True over "
+                             "physical pools: without the write-through "
+                             "mirror the shared pool holds no KV data")
+        req = next((r for r in self.active.values() if r.rid == rid), None)
+        if req is None:
+            raise KeyError(f"request {rid} is not in flight")
+        length = int(np.asarray(self.pos)[req.row])
+        n = -(-length // self.page_size)
+        gids = req.gids[:n]
+        fetched = self.monitor.pools.ensure_resident(gids)
+        # demand-fetched pages are on-demand host reads: charge them
+        mgr = self.monitor.manager
+        mgr.misses += fetched
+        mgr.modeled_time += fetched * mgr.cfg.miss_penalty
+        table = jnp.asarray(self.monitor.pools.table(gids), jnp.int32)[None]
+        lengths = jnp.asarray([length], jnp.int32)
+        out = ops.paged_attention(q, self.monitor.pools.k_hbm,
+                                  self.monitor.pools.v_hbm, table, lengths,
+                                  impl=impl)
+        return out, fetched
+
+
+# ---------------------------------------------------------------------------
+# model-free traffic simulation (same scheduling core, synthetic masses)
+# ---------------------------------------------------------------------------
+
+
+def _sink_pattern(spec: RequestSpec, n_pages: int) -> np.ndarray:
+    return W.attention_sink(spec.new_tokens, n_pages,
+                            sink_pages=min(2, n_pages),
+                            window_pages=min(4, n_pages),
+                            seed=spec.seed, drift_every=1)
+
+
+def _periodic_pattern(spec: RequestSpec, n_pages: int) -> np.ndarray:
+    span = max(1, min(8, n_pages - n_pages // 4))
+    return W.periodic_context(spec.new_tokens, n_pages, span_pages=span,
+                              period=16, seed=spec.seed)
+
+
+def _random_pattern(spec: RequestSpec, n_pages: int) -> np.ndarray:
+    return W.random_lookup(spec.new_tokens, n_pages,
+                           touches=min(3, n_pages), seed=spec.seed)
+
+
+WORKLOAD_KINDS: Dict[str, Callable[[RequestSpec, int], np.ndarray]] = {
+    "sink": _sink_pattern,
+    "periodic": _periodic_pattern,
+    "random": _random_pattern,
+}
+
+
+@dataclasses.dataclass
+class _SynthActive:
+    spec: RequestSpec
+    gids: np.ndarray
+    pattern: np.ndarray                # [lifetime, n_pages]
+    t: int = 0
+
+
+class TrafficScheduler:
+    """Model-free continuous batching over a ``core.traffic`` request
+    stream: admission (Poisson arrivals, FIFO head-of-line), page-aligned
+    allocation from the shared pool, per-step mass merge through the
+    ``TrafficMonitor``, retirement on length.  Deterministic given the
+    stream -- and admission never depends on residency or period, so
+    fixed-period replays of the same stream are directly comparable (the
+    brute-force sweep the benchmark ranks the online tuner against)."""
+
+    def __init__(self, specs: Sequence[RequestSpec], monitor: TrafficMonitor,
+                 *, page_size: int = 16, max_active: int = 8,
+                 kinds: Optional[Dict[str, Callable]] = None):
+        self.pending = collections.deque(
+            sorted(specs, key=lambda s: (s.arrival, s.rid)))
+        self.monitor = monitor
+        self.page_size = page_size
+        self.max_active = max_active
+        self.kinds = dict(WORKLOAD_KINDS)
+        if kinds:
+            self.kinds.update(kinds)
+        self.active: List[_SynthActive] = []
+        self.now = 0
+        self.admitted = 0
+        self.completed = 0
+        self.rejected = 0
+
+    def step(self) -> None:
+        while (self.pending and self.pending[0].arrival <= self.now
+               and len(self.active) < self.max_active):
+            spec = self.pending[0]
+            n_pages = spec.n_pages(self.page_size)
+            if n_pages > self.monitor.pools.n_logical:
+                # can never fit, not even fully drained: dropping it is the
+                # only alternative to blocking the queue forever
+                self.pending.popleft()
+                self.rejected += 1
+                continue
+            gids = self.monitor.pools.alloc(n_pages, spec.rid)
+            if gids is None:           # head-of-line: keep arrival order
+                break
+            self.pending.popleft()
+            pattern = self.kinds[spec.kind](spec, n_pages)
+            self.admitted += 1
+            if pattern.shape[0] == 0:      # zero-lifetime: retire at once
+                self.monitor.release(gids)
+                self.completed += 1
+                continue
+            self.active.append(_SynthActive(spec, gids, pattern))
+
+        # idle steps are not fed to the monitor (matching the model-backed
+        # batcher): an empty lull's near-zero cost would read as a phase
+        # change and churn the tuner through spurious re-profiles
+        if self.active:
+            merged = self.monitor.merge(
+                [(a.gids, a.pattern[a.t]) for a in self.active])
+            self.monitor.on_step(merged, n_active=len(self.active))
+        self.now += 1
+
+        still: List[_SynthActive] = []
+        for a in self.active:
+            a.t += 1
+            if a.t >= a.pattern.shape[0]:
+                self.monitor.release(a.gids)
+                self.completed += 1
+            else:
+                still.append(a)
+        self.active = still
+
+    def run(self, steps: int) -> "TrafficScheduler":
+        for _ in range(steps):
+            self.step()
+        return self

@@ -145,6 +145,59 @@ def test_attention_free_arch_has_no_monitor():
         monitored_generate(params, cfg, prompts, steps=4)
 
 
+@pytest.mark.parametrize("wl_name", ["attention_sink", "periodic_context",
+                                     "random_lookup"])
+def test_symbolic_physical_tiering_parity(wl_name):
+    """maybe_tier_symbolic and maybe_tier share the swap rule exactly: on
+    the same access sequence (including a live period change mid-run) they
+    must produce identical residency and accounting at every step."""
+    from repro.memtier import interleaved_resident
+    wl = getattr(W, wl_name)(120, 32)
+    cfg = dataclasses.replace(CFG, hbm_pages=8, period_steps=4)
+    k = jnp.zeros((32, 4, 2, 8))
+    pools = PagedPools.create(k, k, hbm_pages=8)
+    mgr_p = TieringManager(32, cfg)
+    mgr_s = TieringManager(32, cfg)
+    resident = interleaved_resident(32, 8)
+    np.testing.assert_array_equal(resident, pools.slot_of >= 0)
+    for t in range(wl.shape[0]):
+        mgr_p.on_step(wl[t], pools.slot_of >= 0)
+        pools = mgr_p.maybe_tier(pools)
+        mgr_s.on_step(wl[t], resident)
+        mgr_s.maybe_tier_symbolic(resident)
+        if t == 50:    # live period change, applied to both mid-window
+            mgr_p.set_period(2)
+            mgr_s.set_period(2)
+        np.testing.assert_array_equal(
+            resident, pools.slot_of >= 0,
+            err_msg=f"residency diverged at step {t}")
+    assert mgr_p.migrations == mgr_s.migrations
+    assert mgr_p.modeled_time == mgr_s.modeled_time
+    assert mgr_p.data_moved_pages == mgr_s.data_moved_pages
+    assert mgr_p.hits == mgr_s.hits and mgr_p.misses == mgr_s.misses
+
+
+def test_set_period_mid_window_counts_since_last_tier():
+    """A period change between tier boundaries is counted against the
+    steps already elapsed since the last tier: shortening the period
+    mid-window can make the very next step a boundary."""
+    mgr = TieringManager(16, dataclasses.replace(CFG, hbm_pages=4,
+                                                 period_steps=8))
+    from repro.memtier import interleaved_resident
+    resident = interleaved_resident(16, 4)
+    mass = np.zeros(16, np.float32)
+    mass[:2] = 1.0
+    tiers = []
+    for t in range(16):
+        if t == 3:          # mid-window: 3 steps already elapsed
+            mgr.set_period(2)
+        mgr.on_step(mass, resident)
+        if mgr.maybe_tier_symbolic(resident):
+            tiers.append(t)
+    # at t=3 since_tier hits 4 >= 2 -> immediate boundary, then every 2
+    assert tiers == [3, 5, 7, 9, 11, 13, 15]
+
+
 def test_adaptive_tuner_retunes_on_phase_change():
     """SIV-D extension: when the serving mix shifts (RAG loop -> random
     retrieval), the adaptive tuner detects the hit-rate drop and re-runs

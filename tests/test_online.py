@@ -128,6 +128,31 @@ def test_hold_window_aligns_to_period_no_false_drift():
     assert tuner.retunes == 1, "stable workload must not re-profile"
 
 
+def test_online_tuner_improvement_triggers_reprofile():
+    """Symmetric drift: a *sustained improvement* beyond improve_ratio is a
+    phase change too -- the cheaper mix may admit an even better period, so
+    the tuner must re-profile rather than hold the stale choice."""
+    tuner = OnlineTuner(8, default_period=2, profile_steps=16, trial_steps=8,
+                        horizon_steps=32, bin_width=1, improve_ratio=2.0)
+    ids = lambda t: np.array([t % 4])
+    _drive(tuner, 200, ids, lambda p: 10.0)
+    assert tuner.state == OnlineTuner.HOLD
+    cycles = tuner.retunes
+    # cost improves 10x sustained -> must leave HOLD and re-tune
+    _drive(tuner, 200, ids, lambda p: 1.0)
+    assert tuner.retunes > cycles
+
+
+def test_online_tuner_improvement_detector_can_be_disabled():
+    tuner = OnlineTuner(8, default_period=2, profile_steps=16, trial_steps=8,
+                        horizon_steps=32, bin_width=1, improve_ratio=None)
+    ids = lambda t: np.array([t % 4])
+    _drive(tuner, 200, ids, lambda p: 10.0)
+    cycles = tuner.retunes
+    _drive(tuner, 400, ids, lambda p: 1.0)
+    assert tuner.retunes == cycles, "regression-only detector must hold"
+
+
 def test_online_tuner_empty_reuse_keeps_default():
     """No page is ever re-accessed: the tuner must not crash and must keep
     the default period."""

@@ -1,0 +1,434 @@
+"""Continuous-batching scheduler: shared page pool, traffic-fed tuning.
+
+Covers the PR-2 tentpole: SharedPagedPools allocation/eviction across
+requests, multi-request tiering with free slots and active masks, global
+page-ID reuse collection (including ID recycling), the TrafficScheduler's
+admission/retire path, the end-state acceptance vs a fixed-period sweep,
+and the model-backed ContinuousBatcher's token parity with per-request
+generate over the shared pool."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import OnlineTuner, StreamingReuseCollector, RequestSpec
+from repro.core.traffic import poisson_request_stream, shifting_mix_stream
+from repro.memtier import (SharedPagedPools, TierConfig, TieringManager)
+from repro.serve.sched import (TrafficMonitor, TrafficScheduler,
+                               WORKLOAD_KINDS)
+
+CFG = TierConfig(page_size=16, hbm_pages=8, period_steps=4)
+
+
+# ---------------------------------------------------------------------------
+# SharedPagedPools: allocation, eviction, recycling
+# ---------------------------------------------------------------------------
+
+
+def test_shared_pool_alloc_free_recycle():
+    pools = SharedPagedPools.create(8, 4)
+    a = pools.alloc(3, owner=0)
+    b = pools.alloc(3, owner=1)
+    np.testing.assert_array_equal(a, [0, 1, 2])
+    np.testing.assert_array_equal(b, [3, 4, 5])
+    assert pools.alloc(3, owner=2) is None, "over-capacity must queue"
+    assert pools.free_pages == 2
+    pools.free(a)
+    c = pools.alloc(4, owner=2)
+    np.testing.assert_array_equal(c, [0, 1, 2, 6])  # freed ids recycle
+    assert (pools.owner_of[c] == 2).all()
+
+
+def test_shared_pool_free_evicts_slots():
+    pools = SharedPagedPools.create(8, 4)
+    gids = pools.alloc(4, owner=0)
+    pools.ensure_resident(gids)
+    assert (pools.slot_of[gids] >= 0).all()
+    assert len(pools.free_slots()) == 0
+    pools.free(gids)
+    assert (pools.slot_of[gids] == -1).all()
+    assert len(pools.free_slots()) == 4, "retired pages release their slots"
+
+
+def test_ensure_resident_demand_fetch_counts_and_evicts():
+    pools = SharedPagedPools.create(16, 4)
+    a = pools.alloc(4, owner=0)
+    b = pools.alloc(4, owner=1)
+    assert pools.ensure_resident(a) == 4
+    assert pools.ensure_resident(a) == 0, "already resident: no fetch"
+    assert pools.ensure_resident(b[:2]) == 2, "evicts a's LRU slots"
+    resident_b = pools.slot_of[b[:2]]
+    assert (resident_b >= 0).all()
+    assert (pools.slot_of[a] >= 0).sum() == 2
+    with pytest.raises(ValueError, match="cannot fit"):
+        pools.ensure_resident(np.arange(5))
+
+
+def test_multi_request_tiering_fills_freed_slots_without_evicting():
+    """After a retirement, maybe_tier brings new hot pages into the freed
+    slots and keeps still-useful residents (lazy eviction)."""
+    pools = SharedPagedPools.create(16, 4)
+    mgr = TieringManager(16, dataclasses.replace(CFG, hbm_pages=4,
+                                                 period_steps=1))
+    a = pools.alloc(4, owner=0)
+    mass = np.zeros(16, np.float32)
+    mass[a] = 1.0
+    for _ in range(4):
+        mgr.on_step(mass, pools.resident_mask)
+        mgr.maybe_tier(pools, active=pools.allocated_mask)
+    assert (pools.slot_of[a] >= 0).all()
+    # request 0 retires two pages; request 1 arrives hot
+    mgr.release(a[2:])
+    pools.free(a[2:])
+    b = pools.alloc(2, owner=1)
+    migs = mgr.migrations
+    mass = np.zeros(16, np.float32)
+    mass[a[:2]] = 1.0
+    mass[b] = 1.0
+    for _ in range(4):
+        mgr.on_step(mass, pools.resident_mask)
+        mgr.maybe_tier(pools, active=pools.allocated_mask)
+    assert (pools.slot_of[b] >= 0).all(), "new request's pages tier in"
+    assert (pools.slot_of[a[:2]] >= 0).all(), "live residents not evicted"
+    assert mgr.migrations - migs == 2, "exactly the freed slots were filled"
+
+
+def test_active_mask_keeps_unallocated_pages_out():
+    """Pages no request owns must never enter the working set even when
+    capacity exceeds the allocated footprint."""
+    pools = SharedPagedPools.create(32, 8)
+    mgr = TieringManager(32, dataclasses.replace(CFG, hbm_pages=8,
+                                                 period_steps=1))
+    gids = pools.alloc(3, owner=0)
+    mass = np.zeros(32, np.float32)
+    mass[gids] = 1.0
+    for _ in range(6):
+        mgr.on_step(mass, pools.resident_mask)
+        mgr.maybe_tier(pools, active=pools.allocated_mask)
+    resident = np.nonzero(pools.resident_mask)[0]
+    assert set(resident.tolist()) <= set(gids.tolist())
+
+
+# ---------------------------------------------------------------------------
+# global page-ID reuse collection and recycling
+# ---------------------------------------------------------------------------
+
+
+def test_collector_forget_blocks_cross_owner_gaps():
+    col = StreamingReuseCollector(8, bin_width=1)
+    col.observe(np.array([3]))          # owner A touches page 3 at t=0
+    col.forget(np.array([3]))           # A retires, id 3 recycled
+    col.observe(np.array([3]))          # owner B touches page 3 at t=1
+    assert col.num_samples == 0, "cross-owner gap must not be recorded"
+    col.observe(np.array([3]))          # B re-touches: a real gap
+    assert col.num_samples == 1
+
+
+def test_tuner_forget_pages_delegates():
+    tuner = OnlineTuner(8, bin_width=1)
+    tuner.on_step(accessed_ids=np.array([2]), cost=1.0)
+    tuner.forget_pages(np.array([2]))
+    tuner.on_step(accessed_ids=np.array([2]), cost=1.0)
+    assert tuner.collector.num_samples == 0
+
+
+def test_monitor_release_clears_everything():
+    pools = SharedPagedPools.create(16, 4)
+    mgr = TieringManager(16, dataclasses.replace(CFG, hbm_pages=4,
+                                                 period_steps=1))
+    tuner = OnlineTuner(16, bin_width=1)
+    mon = TrafficMonitor(pools, mgr, tuner)
+    gids = pools.alloc(3, owner=7)
+    mass = np.zeros(16, np.float32)
+    mass[gids] = 1.0
+    for _ in range(3):
+        mon.on_step(mass, n_active=1)
+    assert mgr.hotness[gids].sum() > 0
+    mon.release(gids)
+    assert mgr.hotness[gids].sum() == 0
+    assert (mgr.last_access[gids] == -1).all()
+    assert (tuner.collector.last_access[gids] == -1).all()
+    assert pools.free_pages == 16
+    assert (pools.slot_of[gids] == -1).all()
+
+
+def test_monitor_merge_is_max_per_page():
+    pools = SharedPagedPools.create(8, 4)
+    mgr = TieringManager(8, CFG)
+    mon = TrafficMonitor(pools, mgr)
+    m = mon.merge([(np.array([0, 1]), np.array([0.5, 0.2], np.float32)),
+                   (np.array([1, 2]), np.array([0.9, 0.1], np.float32))])
+    np.testing.assert_allclose(m[:4], [0.5, 0.9, 0.1, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# traffic stream + scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_stream_reproducible_and_phased():
+    a = poisson_request_stream(100, 0.2, {"sink": 1.0}, seed=3)
+    b = poisson_request_stream(100, 0.2, {"sink": 1.0}, seed=3)
+    assert a == b
+    mix = shifting_mix_stream([(50, 0.2, {"random": 1.0}),
+                               (50, 0.2, {"sink": 1.0})], seed=1)
+    assert all(s.kind == "random" for s in mix if s.arrival < 50)
+    assert all(s.kind == "sink" for s in mix if s.arrival >= 50)
+    assert [s.rid for s in mix] == list(range(len(mix)))
+    spec = RequestSpec(rid=0, arrival=0, prompt_len=17, new_tokens=30,
+                       kind="sink", seed=0)
+    assert spec.n_pages(16) == 3, "page-aligned allocation rounds up"
+
+
+def _traffic(specs, steps, *, period=8, tuner=None, n_logical=128,
+             hbm=16, page=16, max_active=6, probe_at=None):
+    pools = SharedPagedPools.create(n_logical, hbm)
+    mgr = TieringManager(n_logical, TierConfig(
+        page_size=page, hbm_pages=hbm, period_steps=period))
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr, tuner),
+                             page_size=page, max_active=max_active)
+    probe = 0.0
+    for t in range(steps):
+        if t == probe_at:
+            probe = mgr.modeled_time
+        sched.step()
+    return sched, mgr, probe
+
+
+def test_traffic_scheduler_admits_and_retires():
+    specs = poisson_request_stream(120, 0.15, {"sink": 0.5, "random": 0.5},
+                                   prompt_len=(8, 32), new_tokens=(16, 40),
+                                   seed=2)
+    sched, mgr, _ = _traffic(specs, 400)
+    assert sched.admitted == len(specs)
+    assert sched.completed == len(specs), "all requests must drain"
+    assert sched.monitor.pools.free_pages == 128, "all pages returned"
+    assert mgr.hits + mgr.misses > 0
+
+
+def test_traffic_scheduler_head_of_line_admission_order():
+    """Admission is FIFO even when a later, smaller request would fit."""
+    specs = [RequestSpec(0, 0, 40 * 16 - 8, 8, "sink", 0),    # 40 pages
+             RequestSpec(1, 0, 40 * 16 - 8, 8, "sink", 1),    # 40 pages
+             RequestSpec(2, 0, 8, 8, "sink", 2)]              # 1 page
+    sched, _, _ = _traffic(specs, 3, n_logical=64, hbm=16)
+    assert sched.admitted == 1, "head-of-line blocks; order is preserved"
+
+
+def test_impossible_requests_rejected_not_deadlocked():
+    """A request larger than the whole logical space can never admit; it is
+    dropped (TrafficScheduler) or refused at submit (ContinuousBatcher)
+    instead of blocking the queue forever."""
+    specs = [RequestSpec(0, 0, 100 * 16 - 8, 8, "sink", 0),   # 100 pages
+             RequestSpec(1, 0, 8, 8, "sink", 1)]              # 1 page
+    sched, _, _ = _traffic(specs, 3, n_logical=64, hbm=16)
+    assert sched.rejected == 1
+    assert sched.admitted == 1, "the queue keeps moving"
+
+
+def test_traffic_replay_deterministic():
+    specs = poisson_request_stream(80, 0.2, {"sink": 1.0}, seed=5)
+    _, m1, _ = _traffic(specs, 200)
+    _, m2, _ = _traffic(specs, 200)
+    assert m1.modeled_time == m2.modeled_time
+    assert m1.migrations == m2.migrations
+
+
+def test_admission_independent_of_period():
+    """Fixed-period replays of one stream admit/retire identically -- the
+    property that makes the brute-force sweep comparable."""
+    specs = poisson_request_stream(100, 0.2, {"sink": 1.0}, seed=4)
+    s1, _, _ = _traffic(specs, 300, period=1)
+    s2, _, _ = _traffic(specs, 300, period=64)
+    assert (s1.admitted, s1.completed) == (s2.admitted, s2.completed)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance: scheduler-fed tuner vs brute-force sweep
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_online_tuner_within_5pct_of_best_fixed():
+    """PR-2 acceptance: on a Poisson stream whose mix shifts mid-run, the
+    scheduler-fed OnlineTuner's end-state modeled cost is within 5% of the
+    best fixed period found by sweeping."""
+    phase = 700
+    steps, window = 2 * phase, 150
+    lo = steps - window
+    specs = shifting_mix_stream(
+        [(phase, 0.10, {"random": 1.0}), (phase, 0.10, {"sink": 1.0})],
+        prompt_len=(16, 48), new_tokens=(40, 100), seed=0)
+    kw = dict(n_logical=256, hbm=32, page=16, max_active=8)
+
+    tuner = OnlineTuner(256, default_period=8, drift_ratio=1.5,
+                        drift_patience=3)
+    _, mgr, probe = _traffic(specs, steps, tuner=tuner, probe_at=lo, **kw)
+    online_steady = (mgr.modeled_time - probe) / window
+    assert tuner.retunes >= 2, "the mix shift must trigger a re-tune"
+
+    best = np.inf
+    for p in (1, 2, 4, 8, 16, 32, 64):
+        _, m, pr = _traffic(specs, steps, period=p, probe_at=lo, **kw)
+        best = min(best, (m.modeled_time - pr) / window)
+    assert online_steady <= 1.05 * best, \
+        f"online {online_steady:.1f} vs best fixed {best:.1f}"
+
+
+# ---------------------------------------------------------------------------
+# model-backed ContinuousBatcher (token parity over the shared pool)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_serving_stack(cfg, params, *, n_logical=48, hbm=16, page=4):
+    pools = SharedPagedPools.create(n_logical, hbm, page_size=page,
+                                    kv_heads=cfg.num_kv_heads,
+                                    head_dim=cfg.head_dim)
+    mgr = TieringManager(n_logical, TierConfig(page_size=page,
+                                               hbm_pages=hbm,
+                                               period_steps=2))
+    tuner = OnlineTuner(n_logical, default_period=2, profile_steps=8,
+                        trial_steps=4)
+    return TrafficMonitor(pools, mgr, tuner)
+
+
+def test_batcher_token_parity_with_generate():
+    """Multi-request decode over SharedPagedPools emits token-identical
+    output to per-request generate (greedy and temperature sampling),
+    across staggered admission and row reuse."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (6, 9, 5)]
+    keys = [jax.random.PRNGKey(10 + i) for i in range(3)]
+    steps = [6, 4, 7]
+    temps = [0.0, 0.7, 0.7]
+
+    mon = _tiny_serving_stack(cfg, params)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, mirror_pages=True)
+    b.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=steps[0],
+                     key=keys[0], temperature=temps[0]))
+    b.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=steps[1],
+                     key=keys[1], temperature=temps[1]))
+    events = []
+    for t in range(40):
+        if t == 2:   # joins mid-flight, lands in a recycled row
+            b.submit(Request(rid=2, prompt=prompts[2],
+                             max_new_tokens=steps[2], key=keys[2],
+                             temperature=temps[2]))
+        events.extend(b.step())
+        if not b.queue and not b.active:
+            break
+    got = {r.rid: r.tokens for r in b.completed}
+    for i in range(3):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(prompts[i])[None],
+                                  steps=steps[i], temperature=temps[i],
+                                  key=keys[i]))[0].tolist()
+        assert got[i] == ref, f"request {i} diverged from generate"
+        streamed = [tok for rid, tok in events if rid == i]
+        assert streamed == ref, \
+            f"step()'s emitted stream must carry request {i}'s full output"
+    assert mon.pools.free_pages == mon.pools.n_logical
+
+
+def test_batcher_retires_on_eos():
+    """A sampled EOS retires the request early (pages released, row
+    recycled), truncating exactly at the EOS token of the generate-
+    equivalent stream."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    key = jax.random.PRNGKey(5)
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompt)[None],
+                              steps=8, key=key))[0].tolist()
+    eos = ref[2]       # make the third greedy token the EOS
+
+    mon = _tiny_serving_stack(cfg, params)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, mirror_pages=True)
+    b.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, key=key,
+                     eos_id=eos))
+    got = b.run()
+    k = ref.index(eos) + 1
+    assert got[0] == ref[:k], "EOS must truncate the generate stream"
+    assert mon.pools.free_pages == mon.pools.n_logical, \
+        "early retirement must release the pages"
+    assert b.rows_free == list(range(b.max_active - 1, -1, -1)) or \
+        sorted(b.rows_free) == list(range(b.max_active))
+
+
+def test_batcher_paged_kernel_gathers_shared_pool():
+    """kernels.paged_attention over the shared HBM pool (slot_of
+    indirection through a request's page table) matches the host-pool
+    reference for an in-flight request with interleaved allocations."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.kernels import ops
+    from repro.models import model as mdl
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    mon = _tiny_serving_stack(cfg, params)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, mirror_pages=True)
+    for i in range(2):
+        prompt = rng.integers(0, cfg.vocab_size, size=7 + i).astype(np.int32)
+        b.submit(Request(rid=i, prompt=prompt, max_new_tokens=8,
+                         key=jax.random.PRNGKey(i)))
+    for _ in range(4):
+        b.step()
+    page = b.page_size
+    for req in list(b.active.values()):
+        q = jax.random.normal(jax.random.PRNGKey(40 + req.rid),
+                              (1, cfg.num_heads, cfg.head_dim))
+        out, _ = b.paged_context(req.rid, q)
+        length = int(np.asarray(b.pos)[req.row])
+        n = -(-length // page)
+        tbl = jnp.asarray(req.gids[:n], jnp.int32)[None]
+        ref = ops.paged_attention(q, mon.pools.k_host, mon.pools.v_host,
+                                  tbl, jnp.asarray([length], jnp.int32),
+                                  impl="reference")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+
+def test_paged_attention_tolerates_ragged_minus_one_padding():
+    """Ragged multi-request page tables pad short rows with -1; the kernel
+    wrapper clamps them (they are masked by lengths) instead of gathering
+    out of bounds."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    n, page, kvh, d, h = 6, 4, 2, 8, 4
+    k = jax.random.normal(key, (n, page, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, page, kvh, d))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (2, h, d))
+    # row 0 uses 3 pages, row 1 only 1 -- padded with -1
+    tbl = jnp.asarray([[2, 0, 4], [5, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([3 * page, page], jnp.int32)
+    out = ops.paged_attention(q, k, v, tbl, lengths, impl="interpret")
+    ref = ops.paged_attention(q, k, v, jnp.maximum(tbl, 0), lengths,
+                              impl="reference")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    assert not np.isnan(np.asarray(out)).any()
