@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -12,15 +13,24 @@ APPS = ["backprop", "quicksilver", "lud", "cpd", "pennant", "kmeans",
 SCHEDS = ["reactive", "predictive"]
 
 
+def out_dir() -> pathlib.Path:
+    """Result directory, overridable via ``REPRO_BENCH_OUT``.  CI smoke
+    runs point this at a temp dir so throwaway results can never be
+    diffed against (or silently shadow) committed artifacts -- results
+    are local scratch, not version-controlled (see .gitignore)."""
+    return pathlib.Path(os.environ.get("REPRO_BENCH_OUT", OUT))
+
+
 def save_json(name: str, payload) -> pathlib.Path:
-    OUT.mkdir(parents=True, exist_ok=True)
-    p = OUT / f"{name}.json"
+    d = out_dir()
+    d.mkdir(parents=True, exist_ok=True)
+    p = d / f"{name}.json"
     p.write_text(json.dumps(payload, indent=1, default=float))
     return p
 
 
 def load_json(name: str):
-    p = OUT / f"{name}.json"
+    p = out_dir() / f"{name}.json"
     return json.loads(p.read_text()) if p.exists() else None
 
 

@@ -9,7 +9,9 @@ EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import tempfile
 
 from benchmarks.common import Timer
 
@@ -17,7 +19,13 @@ from benchmarks.common import Timer
 def smoke() -> None:
     """Fast bit-rot check (CI): tiny-shape runs of the benchmarks wired to
     the serving/tuning path -- online, sweep and traffic -- asserting each
-    one's headline invariant still holds."""
+    one's headline invariant still holds.  Results go to a temp dir
+    (``REPRO_BENCH_OUT``) so the smoke can never diff against -- or
+    clobber -- locally generated results under benchmarks/out/."""
+    if "REPRO_BENCH_OUT" not in os.environ:
+        os.environ["REPRO_BENCH_OUT"] = tempfile.mkdtemp(
+            prefix="repro-bench-smoke-")
+    print(f"# results -> {os.environ['REPRO_BENCH_OUT']}", file=sys.stderr)
     print("name,us_per_call,derived")
 
     from benchmarks import online
@@ -40,10 +48,14 @@ def smoke() -> None:
         tr = traffic.run(quick=True)
     print(f"smoke_traffic,{t.us:.0f},"
           f"vs_best_fixed_steady={tr['online_vs_best_fixed_steady']:.3f};"
-          f"token_identical={tr['token_parity']['token_identical']}")
+          f"token_identical={tr['token_parity']['token_identical']};"
+          f"mem_reduction={tr['cache_memory']['reduction']:.2f}")
     assert tr["token_parity"]["token_identical"], \
-        "batched decode diverged from per-request generate"
+        "fully-paged decode diverged from per-request generate"
     assert tr["requests"]["completed"] > 0, "no traffic completed"
+    assert tr["cache_memory"]["reduction"] >= 0.25, \
+        "bucketed paged rows must cut peak cache memory by >= 25% vs the " \
+        f"dense max_len provisioning (got {tr['cache_memory']['reduction']:.1%})"
 
 
 def main(argv=None) -> None:

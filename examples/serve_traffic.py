@@ -3,10 +3,12 @@
 Two stages:
 
   1. A model-backed ``ContinuousBatcher`` serves a handful of requests
-     through one shared HBM page pool (admission mid-flight, retire on
-     length, monitor-layer masses merged into the global page table) and
-     cross-checks every request's tokens against per-request
-     ``generate`` -- the scheduler must be invisible to the output.
+     FULLY PAGED through one shared HBM page pool (admission mid-flight
+     with batched prefills, retire on length, every attention layer
+     decoding off the pool's slot tables, all-layer masses merged into
+     the global page table) and cross-checks every request's tokens
+     against per-request ``generate`` -- the scheduler must be invisible
+     to the output.
   2. A model-free ``TrafficScheduler`` replays a long Poisson stream
      whose mix shifts mid-run, with the ``OnlineTuner`` re-tuning the
      shared pool's migration period from the merged traffic reuse.
@@ -33,16 +35,13 @@ def serve_batched(args):
     params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     page = 4
-    pools = SharedPagedPools.create(64, 16, page_size=page,
-                                    kv_heads=cfg.num_kv_heads,
-                                    head_dim=cfg.head_dim)
-    mgr = TieringManager(64, TierConfig(page_size=page, hbm_pages=16,
+    pools = SharedPagedPools.create(64, 24)
+    mgr = TieringManager(64, TierConfig(page_size=page, hbm_pages=24,
                                         period_steps=2))
     tuner = OnlineTuner(64, default_period=2, profile_steps=8, trial_steps=4)
     batcher = ContinuousBatcher(params, cfg, max_active=args.batch,
                                 max_len=48, page_size=page,
-                                monitor=TrafficMonitor(pools, mgr, tuner),
-                                mirror_pages=True)
+                                monitor=TrafficMonitor(pools, mgr, tuner))
     reqs = []
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
@@ -58,11 +57,13 @@ def serve_batched(args):
                             key=jax.random.PRNGKey(100 + r.rid))
                    )[0].tolist() == got[r.rid]
         for r in reqs)
-    print(f"batched serve: {len(got)} requests over {batcher.step_idx} "
-          f"scheduler steps on {args.batch} rows; token-identical to "
-          f"per-request generate: {ok}")
+    mode = "fully-paged" if batcher.paged else "dense"
+    print(f"batched serve ({mode}): {len(got)} requests over "
+          f"{batcher.step_idx} scheduler steps on {args.batch} rows; "
+          f"token-identical to per-request generate: {ok}")
     print(f"  shared pool: {mgr.migrations} migrations, {mgr.hits} hits / "
-          f"{mgr.misses} misses, tuner={tuner.state} period={tuner.period}")
+          f"{mgr.misses} misses, peak {pools.peak_allocated} pages, "
+          f"tuner={tuner.state} period={tuner.period}")
 
 
 def serve_traffic(args):

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs link checker (CI): fail on broken intra-repo references.
+
+Checks every markdown file under docs/ plus the repo-root markdown files
+for:
+
+  * relative markdown links ``[text](path)`` whose target file does not
+    exist (external http(s)/mailto links are skipped, ``#fragment``-only
+    links are skipped, a trailing ``#section`` is stripped before the
+    existence check);
+  * backticked code references that look like repo paths
+    (``src/...``, ``docs/...``, ``benchmarks/...``, ``tests/...``,
+    ``examples/...``, ``scripts/...``) and point at a missing file;
+  * dotted module references like ``repro.serve.sched`` that no longer
+    resolve to a module under ``src/``.
+
+    python scripts/check_docs.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(
+    r"`((?:src|docs|benchmarks|tests|examples|scripts)/[A-Za-z0-9_./-]+)`")
+MODULE_REF = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def md_files(root: pathlib.Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def module_ref_ok(root: pathlib.Path, dotted: str) -> bool:
+    """True iff the dotted reference resolves under src/: either the full
+    path is a package/module, or some prefix is a module *file* (the
+    remaining segments are then attributes of it).  A prefix that is only
+    a package directory does NOT rescue a missing submodule -- that is
+    exactly the stale-rename case this check exists for."""
+    parts = dotted.split(".")
+    base = root / "src"
+    for i in range(len(parts), 0, -1):
+        prefix = base / pathlib.Path(*parts[:i])
+        if prefix.with_suffix(".py").is_file():
+            return True                      # rest are attributes
+        if prefix.is_dir():
+            if i == len(parts):
+                return True                  # the package itself
+            # something *inside* this package that is not a submodule:
+            # accept only names the package __init__ actually re-exports
+            init = prefix / "__init__.py"
+            return init.is_file() and re.search(
+                rf"\b{re.escape(parts[i])}\b", init.read_text()) is not None
+    return False
+
+
+def check(root: pathlib.Path) -> int:
+    errors = []
+    for md in md_files(root):
+        text = md.read_text()
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+        for m in CODE_PATH.finditer(text):
+            path = m.group(1).rstrip("/")
+            if not (root / path).exists():
+                errors.append(f"{md.relative_to(root)}: missing path "
+                              f"reference `{m.group(1)}`")
+        for m in MODULE_REF.finditer(text):
+            if not module_ref_ok(root, m.group(1)):
+                errors.append(f"{md.relative_to(root)}: unresolvable module "
+                              f"reference `{m.group(1)}`")
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(list(md_files(root)))} markdown files: "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else pathlib.Path(__file__).resolve().parent.parent
+    raise SystemExit(check(root))

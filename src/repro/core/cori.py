@@ -16,6 +16,26 @@ the hybrid-memory simulator, or any callable ``period -> runtime``) and stops
 either when a trial budget is hit or when performance stops improving
 ("performance ... shows no significant variation from the last trial",
 §IV-D).
+
+Invariants of the online state machine (pinned by tests/test_online.py and
+tests/test_sched.py):
+
+  * **Trial-window alignment.**  Every cost window (TRIAL and HOLD) is
+    rounded up to a whole multiple of the period being measured, so each
+    window contains the same number of tiering events.  Without this, a
+    window boundary aliasing against the period makes per-step costs
+    oscillate and fakes drift on a perfectly stable workload.  Trials rank
+    by the window's *tail* half only -- the head absorbs the residency
+    transient inherited from whatever period ran before.
+  * **Page-ID recycling contract.**  ``forget_pages`` must be called when
+    the serving scheduler frees a logical page ID, *before* the allocator
+    may recycle it; a recycled ID's first access by its new owner must
+    never pair with the old owner's last access into a bogus reuse gap.
+  * **Mass-domain stability.**  The collector thresholds page masses into
+    accessed sets.  The fully-paged serving path feeds masses aggregated
+    over ALL attention layers (head-normalised, layer-averaged);
+    ``rel_threshold`` switches the cut to a fraction of the step's peak
+    mass so the accessed-set size does not drift with batch occupancy.
 """
 from __future__ import annotations
 
@@ -198,6 +218,7 @@ class OnlineTuner:
                  improve_patience: Optional[int] = None,
                  bin_width: int = 1,
                  min_period: float = 1.0, access_threshold: float = 0.05,
+                 rel_threshold: bool = False,
                  max_candidates: int = 16, cost_log_len: int = 4096):
         self.collector = StreamingReuseCollector(
             n_pages, window=window or 4 * profile_steps, bin_width=bin_width)
@@ -214,6 +235,7 @@ class OnlineTuner:
                                  is not None else drift_patience)
         self.min_period = min_period
         self.access_threshold = access_threshold
+        self.rel_threshold = rel_threshold
         self.max_candidates = max_candidates
 
         self.state = self.PROFILE
@@ -249,7 +271,8 @@ class OnlineTuner:
         if accessed_ids is not None:
             self.collector.observe(accessed_ids)
         elif page_mass is not None:
-            self.collector.observe_mass(page_mass, self.access_threshold)
+            self.collector.observe_mass(page_mass, self.access_threshold,
+                                        relative=self.rel_threshold)
         self._win_cost += float(cost)
         self._win_steps += 1
         self.cost_log.append(float(cost))

@@ -142,11 +142,24 @@ class StreamingReuseCollector:
             while self._gaps and self._gaps[0][0] < horizon:
                 self._gaps.popleft()
 
-    def observe_mass(self, page_mass: np.ndarray,
-                     threshold: float = 0.05) -> None:
+    def observe_mass(self, page_mass: np.ndarray, threshold: float = 0.05,
+                     relative: bool = False) -> None:
         """Record a step from raw per-page attention masses (the serving
-        monitor's output): mass >= threshold counts as an access."""
-        self.observe(np.nonzero(np.asarray(page_mass) >= threshold)[0])
+        monitor's output): mass >= threshold counts as an access.
+
+        With ``relative=True`` the threshold is a fraction of the step's
+        maximum page mass instead of an absolute level.  The fully-paged
+        serving path aggregates masses over ALL attention layers
+        (head-normalised, layer-averaged, so each request's row sums to
+        ~1 regardless of head count or depth); a relative threshold keeps
+        the accessed-set size stable when the number of in-flight
+        requests -- and hence the absolute mass a single page can draw --
+        shifts."""
+        mass = np.asarray(page_mass)
+        if relative:
+            threshold = threshold * float(mass.max(initial=0.0))
+            threshold = max(threshold, np.finfo(np.float32).tiny)
+        self.observe(np.nonzero(mass >= threshold)[0])
 
     @property
     def num_samples(self) -> int:

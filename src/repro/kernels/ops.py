@@ -42,9 +42,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                bkv=bkv, interpret=(impl == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "return_mass",
+                                    "impl"))
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
-                    impl: str = "interpret"):
+                    window: int = 0, softcap: float = 0.0,
+                    return_mass: bool = False, impl: str = "interpret"):
     # Ragged multi-request tables pad short rows with -1; those entries are
     # already masked out by `lengths`, so clamp them to a valid physical
     # page before the gather (the Pallas index_map would otherwise DMA out
@@ -55,6 +58,19 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
     page_table = jnp.maximum(page_table, 0)
     if impl == "reference":
         return _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
-                                        lengths)
-    return _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
-                               interpret=(impl == "interpret"))
+                                        lengths, window=window,
+                                        softcap=softcap,
+                                        return_mass=return_mass)
+    out = _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
+                              window=window, softcap=softcap,
+                              interpret=(impl == "interpret"))
+    if not return_mass:
+        return out
+    # The online-softmax kernel does not keep normalised per-page weights;
+    # recompute the mass signal with the reference oracle (on the CPU
+    # substrate the serving loop runs impl="reference" anyway; a TPU
+    # deployment would fuse this as a second cheap pass).
+    _, mass = _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                       lengths, window=window,
+                                       softcap=softcap, return_mass=True)
+    return out, mass

@@ -11,6 +11,23 @@ Grid: (batch, pages_per_seq); online softmax carries (m, l, acc) in VMEM
 scratch across the page axis, exactly like flash attention but with the kv
 tile = one page and block indices taken from the page table.
 
+Since the fully-paged decode refactor, *every* attention layer of the
+serving engine reads its KV through this kernel, so it supports the whole
+layer mix, not just the monitor layer:
+
+  * ``window > 0`` -- sliding-window (local) layers: only positions in
+    ``[length - window, length)`` are attended.  Callers still pass the
+    full page table; out-of-window pages are masked, not skipped, so one
+    table layout serves every layer of a multi-layer pool.
+  * ``softcap > 0`` -- tanh logit capping (Gemma-style), applied before
+    masking exactly as in the dense layers.
+
+Multi-request tables are ragged: rows shorter than ``pages_per_seq`` are
+padded with ``-1`` (bucket-rounded allocations leave tail pages unused).
+The jitted wrapper (``repro.kernels.ops.paged_attention``) clamps those to
+0 -- they are masked by ``lengths`` -- so the index_map never DMAs out of
+bounds.
+
 q: [B, H, D]; k_pages/v_pages: [P_phys, page, KV, D];
 page_table: int32[B, pages_per_seq]; lengths: int32[B].
 """
@@ -28,7 +45,8 @@ NEG_INF = -1e30
 
 
 def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, page: int, n_pages: int, scale: float):
+            m_scr, l_scr, acc_scr, *, page: int, n_pages: int, scale: float,
+            window: int, softcap: float):
     b = pl.program_id(0)
     pi = pl.program_id(1)
 
@@ -49,11 +67,17 @@ def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
     # token positions covered by this logical page
     pos = pi * page + jax.lax.iota(jnp.int32, page)
     valid = pos < length                           # [page]
+    if window > 0:
+        # sliding-window layer: the decoding token sits at length - 1, so
+        # the attended span is [length - window, length)
+        valid &= pos >= length - window
 
     qg = q.reshape(kvh, rep, d)
     logits = jax.lax.dot_general(
         qg, k, (((2,), (2,)), ((0,), (1,))),
         preferred_element_type=jnp.float32) * scale   # [kvh, rep, page]
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
     logits = jnp.where(valid[None, None, :], logits, NEG_INF)
 
     m_prev = m_scr[...]                            # [kvh, rep, 1]... flat [h,1]
@@ -78,6 +102,7 @@ def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    window: int = 0, softcap: float = 0.0,
                     interpret: bool = False):
     """Decode attention over paged KV.  Returns [B, H, D]."""
     b, h, d = q.shape
@@ -87,7 +112,7 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
     scale = 1.0 / np.sqrt(d)
 
     kernel = functools.partial(_kernel, page=page, n_pages=n_pages,
-                               scale=scale)
+                               scale=scale, window=window, softcap=softcap)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, n_pages),

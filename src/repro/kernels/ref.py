@@ -36,8 +36,17 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), vr)
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
-    """q: [B,H,D]; pages: [P,page,KV,D]; page_table: [B,n]; lengths: [B]."""
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        window: int = 0, softcap: float = 0.0,
+                        return_mass: bool = False):
+    """q: [B,H,D]; pages: [P,page,KV,D]; page_table: [B,n]; lengths: [B].
+
+    ``window > 0`` restricts attention to positions [length-window, length)
+    (sliding-window layers); ``softcap > 0`` applies tanh logit capping.
+    With ``return_mass`` also returns the per-page attention-probability
+    mass f32[B, n], *head-normalised* (each row sums to ~1): the "accessed
+    bits" signal the fully-paged serving monitor aggregates across layers.
+    """
     b, h, d = q.shape
     _, page, kvh, _ = k_pages.shape
     n = page_table.shape[1]
@@ -49,7 +58,16 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
     vr = jnp.repeat(v, h // kvh, axis=2)
     logits = jnp.einsum("bhd,bthd->bht", q, kr,
                         preferred_element_type=jnp.float32) / np.sqrt(d)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
     pos = jnp.arange(n * page)[None, :]
-    logits = jnp.where((pos < lengths[:, None])[:, None, :], logits, -1e30)
+    valid = pos < lengths[:, None]
+    if window > 0:
+        valid &= pos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bht,bthd->bhd", w.astype(vr.dtype), vr)
+    out = jnp.einsum("bht,bthd->bhd", w.astype(vr.dtype), vr)
+    if not return_mass:
+        return out
+    mass = w.sum(axis=1).reshape(b, n, page).sum(axis=-1) / h   # [B, n]
+    return out, mass

@@ -14,11 +14,11 @@ import numpy as np
 
 from repro.core import cori
 from repro.memtier.tiering import (PagedPools, SharedPagedPools, TierConfig,
-                                   TieringManager)
+                                   TieringManager, bucket_pages)
 
 __all__ = ["PagedPools", "SharedPagedPools", "TierConfig", "TieringManager",
-           "replay", "online_replay", "cori_tune_period", "resident_mask",
-           "interleaved_resident"]
+           "bucket_pages", "replay", "online_replay", "cori_tune_period",
+           "resident_mask", "interleaved_resident"]
 
 
 def interleaved_resident(n: int, hbm_pages: int) -> np.ndarray:

@@ -16,12 +16,34 @@ with TPU-tier constants (HBM vs PCIe-host), since this container has no
 real TPU clock: a decode step pays 1 unit per resident-page touch,
 ``miss_penalty`` per non-resident touch (on-demand host fetch), plus
 migration and wakeup costs per tiering period.
+
+Invariants the serving scheduler relies on (pinned by tests/test_sched.py
+and tests/test_memtier.py):
+
+  * **Page-ID recycling contract.**  A logical page ID freed by
+    ``SharedPagedPools.free`` may be handed to a different request by the
+    next ``alloc``.  Every consumer of page IDs must therefore be told
+    about the free *before* the ID recycles: ``TieringManager.release``
+    clears hotness/recency, ``OnlineTuner.forget_pages`` invalidates the
+    reuse chain, and the pool itself drops residency and owner.  A
+    recycled ID always starts cold, host-only and unowned.
+  * **Active-mask semantics.**  ``maybe_tier(active=...)`` ranks only
+    pages some request currently owns; unallocated IDs can never enter
+    the working set even when capacity exceeds the allocated footprint.
+    With ``active=None`` (single-request pools) every ID is rankable and
+    the rule reduces bit-exactly to the paper's paired-swap at fixed
+    footprint.
+  * **One slot table, many layers.**  In the fully-paged serving path the
+    pools carry one KV leaf per attention layer
+    (``attach_layered_kv``), but residency is per *logical page*: a page
+    is resident for all layers or none, and every migration
+    (``migrate_slots``) moves all layers' bytes for that page together.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +52,24 @@ import numpy as np
 from repro.core import cori, reuse
 from repro.kernels import ops
 
-__all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools"]
+__all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools",
+           "bucket_pages"]
+
+
+def bucket_pages(n_pages: int, cap: Optional[int] = None) -> int:
+    """Shape-bucketed allocation size: round a page count up to the next
+    power of two, capped at ``cap`` (the cache-row capacity in pages).
+
+    Buckets bound the number of distinct allocation shapes (so jitted
+    decode functions and pool scatter patterns are reused across request
+    lengths) at a bounded fragmentation cost: a request never holds more
+    than 2x its exact page need, and never more than one full row."""
+    if n_pages <= 0:
+        raise ValueError(f"cannot bucket {n_pages} pages")
+    if cap is not None and n_pages > cap:
+        raise ValueError(f"{n_pages} pages exceed the {cap}-page row cap")
+    b = 1 << (n_pages - 1).bit_length()
+    return min(b, cap) if cap is not None else b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,12 +116,27 @@ class PagedPools:
         """No-op: the fixed single-request pool has no demand-fetch path,
         so slot recency is meaningless here (SharedPagedPools tracks it)."""
 
+    def migrate_slots(self, slots, logicals) -> None:
+        """Copy host pages ``logicals`` into HBM ``slots`` (all pools)."""
+        if len(slots) == 0 or self.k_host is None:
+            return
+        sl, lg = jnp.asarray(slots), jnp.asarray(logicals)
+        self.k_hbm = _migrate(self.k_hbm, self.k_host, sl, lg)
+        self.v_hbm = _migrate(self.v_hbm, self.v_host, sl, lg)
+
 
 @jax.jit
 def _migrate(pool_hbm, pool_host, slots, logicals):
     """Copy host pages `logicals` into HBM `slots` (the move_pages analogue;
     on real hardware this is the pinned_host->device DMA)."""
     return pool_hbm.at[slots].set(pool_host[logicals])
+
+
+@jax.jit
+def _migrate_stacked(pool_hbm, pool_host, slots, logicals):
+    """`_migrate` for layer-stacked pools [R, P, page, KV, D]: one page's
+    bytes move for every repeat of the layer slot together."""
+    return pool_hbm.at[:, slots].set(pool_host[:, logicals])
 
 
 class SharedPagedPools:
@@ -118,6 +172,10 @@ class SharedPagedPools:
         self.hbm_pages = int(hbm_pages)
         self.k_host, self.v_host = k_host, v_host
         self.k_hbm, self.v_hbm = k_hbm, v_hbm
+        # fully-paged mode: one KV leaf per attention layer slot, all
+        # indirected by the SAME slot_of table (see attach_layered_kv)
+        self.kv_layers: Optional[Dict[str, List[jnp.ndarray]]] = None
+        self.layer_meta: Tuple = ()
         self.slot_of = np.full((n_logical,), -1, np.int32)
         self.page_of_slot = np.full((hbm_pages,), -1, np.int32)
         self.owner_of = np.full((n_logical,), -1, np.int64)
@@ -126,6 +184,10 @@ class SharedPagedPools:
         # per-slot touch tick for the demand-fetch victim choice
         self._slot_tick = np.zeros((hbm_pages,), np.int64)
         self._tick = 0
+        # allocation accounting (bucketed rows: benchmarks compare this
+        # peak against the dense max_len provisioning)
+        self.allocated_pages = 0
+        self.peak_allocated = 0
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -143,10 +205,41 @@ class SharedPagedPools:
                    k_hbm=jnp.zeros(hshape, dtype),
                    v_hbm=jnp.zeros(hshape, dtype))
 
+    def attach_layered_kv(self, layer_repeats: Sequence[int], *,
+                          page_size: int, kv_heads: int, head_dim: int,
+                          dtype=jnp.float32) -> None:
+        """Grow per-layer KV storage for the fully-paged decode path: one
+        (k, v) leaf pair per attention layer slot, stacked over that
+        slot's ``repeats``, host side [R, n_logical, page, KV, D] and HBM
+        side [R, hbm_pages, page, KV, D].  All leaves share this pool's
+        single ``slot_of`` table -- a logical page is resident for every
+        layer or for none, and migrations move all layers together."""
+        k_hbm, v_hbm, k_host, v_host = [], [], [], []
+        for r in layer_repeats:
+            hshape = (r, self.n_logical, page_size, kv_heads, head_dim)
+            dshape = (r, self.hbm_pages, page_size, kv_heads, head_dim)
+            k_host.append(jnp.zeros(hshape, dtype))
+            v_host.append(jnp.zeros(hshape, dtype))
+            k_hbm.append(jnp.zeros(dshape, dtype))
+            v_hbm.append(jnp.zeros(dshape, dtype))
+        self.kv_layers = {"k_hbm": k_hbm, "v_hbm": v_hbm,
+                          "k_host": k_host, "v_host": v_host}
+        self.layer_meta = tuple(int(r) for r in layer_repeats)
+
+    def kv_view(self) -> Dict[str, List[jnp.ndarray]]:
+        """The layered-KV pytree a jitted paged decode step consumes (and
+        returns updated; store it back with ``set_kv``)."""
+        if self.kv_layers is None:
+            raise ValueError("no layered KV attached (attach_layered_kv)")
+        return {k: list(v) for k, v in self.kv_layers.items()}
+
+    def set_kv(self, kv: Dict[str, List[jnp.ndarray]]) -> None:
+        self.kv_layers = {k: list(v) for k, v in kv.items()}
+
     # -- views ---------------------------------------------------------------
     @property
     def physical(self) -> bool:
-        return self.k_host is not None
+        return self.k_host is not None or self.kv_layers is not None
 
     @property
     def resident_mask(self) -> np.ndarray:
@@ -176,6 +269,8 @@ class SharedPagedPools:
         gids = np.asarray([self._free_ids.pop() for _ in range(n_pages)],
                           np.int64)
         self.owner_of[gids] = owner
+        self.allocated_pages += n_pages
+        self.peak_allocated = max(self.peak_allocated, self.allocated_pages)
         return gids
 
     def free(self, gids: np.ndarray) -> None:
@@ -187,12 +282,15 @@ class SharedPagedPools:
         self.slot_of[gids] = -1
         self.owner_of[gids] = -1
         self._free_ids.extend(sorted(gids.tolist(), reverse=True))
+        self.allocated_pages -= int(gids.size)
 
     # -- physical data path --------------------------------------------------
     def write_page(self, gid: int, k_page, v_page) -> None:
         """Write one logical page's KV data (host copy; mirrored to the HBM
-        slot when resident, the write-through of a decode-step append)."""
-        if not self.physical:
+        slot when resident, the write-through of a decode-step append).
+        Legacy single-layer pools only -- the fully-paged path writes its
+        layered leaves inside the jitted decode step instead."""
+        if self.k_host is None:
             return
         self.k_host = self.k_host.at[gid].set(k_page)
         self.v_host = self.v_host.at[gid].set(v_page)
@@ -207,6 +305,26 @@ class SharedPagedPools:
         the first LRU victims)."""
         self._tick += 1
         self._slot_tick[np.asarray(slots, np.int64)] = self._tick
+
+    def migrate_slots(self, slots, logicals) -> None:
+        """Copy host pages ``logicals`` into HBM ``slots`` on EVERY
+        physical pool: the legacy monitor-layer pair and, in fully-paged
+        mode, each attention layer's leaf (one page's bytes move for all
+        layers together -- the page is the migration unit, not the
+        (page, layer) pair)."""
+        if len(slots) == 0:
+            return
+        sl, lg = jnp.asarray(slots), jnp.asarray(logicals)
+        if self.k_host is not None:
+            self.k_hbm = _migrate(self.k_hbm, self.k_host, sl, lg)
+            self.v_hbm = _migrate(self.v_hbm, self.v_host, sl, lg)
+        if self.kv_layers is not None:
+            kv = self.kv_layers
+            for i in range(len(kv["k_hbm"])):
+                kv["k_hbm"][i] = _migrate_stacked(kv["k_hbm"][i],
+                                                  kv["k_host"][i], sl, lg)
+                kv["v_hbm"][i] = _migrate_stacked(kv["v_hbm"][i],
+                                                  kv["v_host"][i], sl, lg)
 
     def ensure_resident(self, gids: np.ndarray) -> int:
         """Demand-fetch: make every page in `gids` HBM-resident (free slots
@@ -235,11 +353,7 @@ class SharedPagedPools:
             self.slot_of[gid] = slot
             self.page_of_slot[slot] = gid
             slots.append(slot)
-        if self.physical and slots:
-            self.k_hbm = _migrate(self.k_hbm, self.k_host,
-                                  jnp.asarray(slots), jnp.asarray(missing))
-            self.v_hbm = _migrate(self.v_hbm, self.v_host,
-                                  jnp.asarray(slots), jnp.asarray(missing))
+        self.migrate_slots(slots, missing)
         self._slot_tick[self.slot_of[gids]] = self._tick
         return int(missing.size)
 
@@ -368,11 +482,7 @@ class TieringManager:
             pools.slot_of[bring] = slots
             pools.page_of_slot[slots] = bring
             pools.touch_slots(slots)   # shared pools track slot recency
-            if pools.k_host is not None:
-                pools.k_hbm = _migrate(pools.k_hbm, pools.k_host,
-                                       jnp.asarray(slots), jnp.asarray(bring))
-                pools.v_hbm = _migrate(pools.v_hbm, pools.v_host,
-                                       jnp.asarray(slots), jnp.asarray(bring))
+            pools.migrate_slots(slots, bring)
         self.migrations += int(n_mig)
         # 2x = the k page + the v page per migration; evictions move no
         # data (the host copy is write-through, dropping a slot is free)

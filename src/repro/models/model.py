@@ -6,6 +6,13 @@ segment are stacked ``[R, ...]`` and executed with ``lax.scan`` over repeats
 length, not the layer count.  ``jax.checkpoint`` (remat) wraps the scan body
 when ``cfg.remat``.
 
+Serving has two decode data paths: the dense per-row cache
+(``init_cache``/``decode_step``) and the fully-paged path
+(``decode_step_paged``) where every attention layer reads and writes
+shared KV page pools through ``kernels.paged_attention`` -- see
+docs/serving.md.  ``prefill_batched`` packs a scheduler step's admissions
+into one right-padded forward pass for either path.
+
 All functions are pure; sharding is applied externally (pjit in_shardings
 from the spec tree + optional ``shard_fn`` activation constraints).
 """
@@ -18,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import recurrent as R
@@ -485,6 +493,18 @@ def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None, cond=None,
                 if window > 0 and s > window:
                     e = jax.tree.map(lambda a: a[:, :, -window:], e)
                     pos = pos[:, :, -window:]
+                    # Ring alignment: decode overwrites slot cur_pos %
+                    # window, so slot j must hold the position == j (mod
+                    # window).  The chronological clip above puts position
+                    # s-window+j at slot j; roll by s % window to restore
+                    # the ring invariant -- without it, a prompt with
+                    # s % window >= 2 had its next decode step overwrite a
+                    # position still inside the attention window.
+                    shift = s % window
+                    if shift:
+                        e = jax.tree.map(
+                            lambda a: jnp.roll(a, shift, axis=2), e)
+                        pos = jnp.roll(pos, shift, axis=2)
                 if kind.mla:
                     slots.append({"ckv": e["ckv"], "krope": e["krope"],
                                   "pos": pos})
@@ -522,6 +542,309 @@ def pad_cache(cache, cfg: ModelConfig, max_len: int):
             slots.append(c)
         segs.append(slots)
     return {"segments": segs}
+
+
+# ---------------------------------------------------------------------------
+# fully-paged serving path: batched prefill + decode over shared page pools
+# ---------------------------------------------------------------------------
+
+
+def attn_slot_meta(cfg: ModelConfig):
+    """Attention slots in execution order: (si, j, repeats, window, kind).
+
+    This is the layer enumeration the shared page pools mirror: one KV
+    leaf per (segment, slot), stacked ``[repeats, ...]`` exactly like the
+    parameter tree, so the paged decode scan can slice pools and params
+    with the same index."""
+    out = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            if kind.is_attention:
+                window = cfg.window_size if kind.base == "local" else 0
+                out.append((si, j, repeats, window, kind))
+    return out
+
+
+def attn_slot_index(cfg: ModelConfig, si: int, j: int) -> int:
+    """Index of segment ``si`` slot ``j`` in the ``attn_slot_meta`` order
+    (== its KV leaf index in the shared pools' layered storage)."""
+    for i, (si_, j_, _, _, _) in enumerate(attn_slot_meta(cfg)):
+        if (si_, j_) == (si, j):
+            return i
+    raise ValueError(f"({si}, {j}) is not an attention slot of {cfg.name}")
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Whether decode can run fully paged: every layer with KV state is a
+    plain (non-MLA) attention layer, and positions are gapless.
+
+    * MLA caches compress to (ckv, krope) rows -- a different page
+      geometry; they stay on the dense path until the pools grow a
+      second leaf shape.
+    * Recurrent cells carry O(1) state, not KV pages, and a right-padded
+      batched prefill would fold padding tokens into that state.
+    * ``prefix_len > 0`` leaves a position gap between the prompt and the
+      first decode position (engine semantics), which the paged kernel's
+      ``pos < length`` validity test cannot express.
+    """
+    if cfg.prefix_len:
+        return False
+    for pattern, _ in cfg.segments:
+        for kind_s in pattern:
+            kind = parse_kind(kind_s)
+            if not kind.is_attention or kind.mla:
+                return False
+    return True
+
+
+def batched_prefill_supported(cfg: ModelConfig) -> bool:
+    """Right-padded batched prefill is exact iff no layer carries
+    sequential state across positions (recurrent cells would consume the
+    padding tokens of short rows).  Attention rows are causal, so a row's
+    valid prefix never sees the padding."""
+    for pattern, _ in cfg.segments:
+        for kind_s in pattern:
+            if not parse_kind(kind_s).is_attention:
+                return False
+    return True
+
+
+def prefill_batched(params, cfg: ModelConfig, tokens, lengths, *, cond=None,
+                    mesh=None, shard=_IDENT):
+    """Batched-admission prefill: one packed forward over right-padded
+    prompts.  tokens: [B, Smax] int32 (rows padded with any id); lengths:
+    int32[B] true prompt length per row.
+
+    Returns (last_logits [B,1,V], cache) where ``last_logits[b]`` is the
+    logits at position ``lengths[b] - 1`` and the cache keeps the FULL
+    padded timeline (no window clipping -- per-request extraction happens
+    in ``row_cache_from_batched`` / the paged page-writer, which know each
+    row's true length).  ``pos`` is per-row masked: slot t holds t for
+    t < lengths[b], else -1.  Causality makes each row's valid prefix
+    independent of its padding, so row b's logits and cache match a
+    per-request prefill of its own prompt.
+    """
+    if not batched_prefill_supported(cfg):
+        raise ValueError(f"{cfg.name}: batched prefill needs all-attention "
+                         "layers (recurrent state would fold in padding)")
+    x = L.embed(params["embed"], cfg, tokens)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None]
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    x, caches, _ = _run_segments_seq(params, cfg, x, positions=positions,
+                                     cond=cond, mesh=mesh, shard=shard,
+                                     collect_cache=True)
+    x = L.rms_norm(x, params["final_norm"])
+    last = x[jnp.arange(b), jnp.asarray(lengths) - 1][:, None]
+    logits = L.unembed(params["embed"], cfg, last)
+
+    pos_row = jnp.where(jnp.arange(s)[None] < jnp.asarray(lengths)[:, None],
+                        jnp.arange(s)[None], -1).astype(jnp.int32)
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        slots = []
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            e = caches[si][j]
+            pos = jnp.broadcast_to(pos_row[None], (repeats, b, s))
+            if kind.mla:
+                slots.append({"ckv": e["ckv"], "krope": e["krope"],
+                              "pos": pos})
+            else:
+                slots.append({"k": e["k"], "v": e["v"], "pos": pos})
+        segs.append(slots)
+    return logits, {"segments": segs}
+
+
+def row_cache_from_batched(cache, cfg: ModelConfig, bi: int, length: int,
+                           max_len: int):
+    """Extract request ``bi`` from a ``prefill_batched`` cache as the row
+    pytree a packed dense cache expects at one batch row: attention
+    entries [R, cap, ...] with ring-consistent window layout (slot ==
+    pos % window) and pos == -1 beyond ``length`` -- exactly what
+    per-request ``prefill`` + ``pad_cache`` would have produced, modulo
+    values at masked slots (which attention zeroes out)."""
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        slots = []
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            e = cache["segments"][si][j]
+            window = cfg.window_size if kind.base == "local" else 0
+            cap = min(window, max_len) if window > 0 else max_len
+            s = e["pos"].shape[2]
+            if length > cap:
+                # window ring: slot i holds the unique in-window position
+                # with pos % cap == i (the invariant decode's ring
+                # overwrite preserves)
+                lo = length - cap
+                idx = lo + (np.arange(cap) - lo) % cap
+                pos_np = idx
+            else:
+                idx = np.minimum(np.arange(cap), s - 1)
+                pos_np = np.where(np.arange(cap) < length,
+                                  np.arange(cap), -1)
+            src = jnp.asarray(idx, jnp.int32)
+            pos_row = jnp.broadcast_to(
+                jnp.asarray(pos_np, jnp.int32)[None], (repeats, cap))
+            row = {key_: (pos_row if key_ == "pos" else a[:, bi, src])
+                   for key_, a in e.items()}
+            slots.append(row)
+        segs.append(slots)
+    return {"segments": segs}
+
+
+def decode_step_paged(params, cfg: ModelConfig, kv, tables, gid_tables,
+                      tokens, cur_pos, *, page_size: int,
+                      impl: str = "reference", cond=None, mesh=None,
+                      shard=_IDENT):
+    """One decode step with EVERY attention layer reading and writing the
+    shared paged KV pools through ``kernels.paged_attention`` -- the
+    fully-paged serving hot path (no dense per-row cache exists).
+
+    kv: {"k_hbm": [leaf..], "v_hbm": [..], "k_host": [..], "v_host": [..]}
+        one leaf per ``attn_slot_meta`` entry; HBM leaves are the resident
+        slot pools [R, hbm_pages, page, KV, D] the kernel gathers from,
+        host leaves [R, n_logical, page, KV, D] are the write-through
+        backing copy that survives eviction.
+    tables:     int32[B, n_row_pages] physical HBM slot per row page
+                (-1 = padding / inactive row; reads are masked by length,
+                writes are dropped).
+    gid_tables: int32[B, n_row_pages] global logical page id per row page
+                (-1 = padding), for the host-copy write-through.
+    tokens: [B,1]; cur_pos: int32[B], position of the token being decoded
+                (-1 = inactive row).
+
+    Returns (logits [B,1,V], new_kv, page_mass f32[B, n_row_pages]) where
+    ``page_mass`` is the per-request attention-probability mass per row
+    page aggregated over ALL attention layers (head-normalised per layer,
+    mean across layers -- each active row sums to ~1): the true aggregate
+    traffic signal online Cori tunes from, replacing the single
+    monitor-layer sample.
+    """
+    if not paged_supported(cfg):
+        raise ValueError(f"{cfg.name}: fully-paged decode needs all-"
+                         "attention (non-MLA) layers and prefix_len == 0")
+    b = tokens.shape[0]
+    n_row_pages = tables.shape[1]
+    active = cur_pos >= 0
+    lengths = jnp.where(active, cur_pos + 1, 0)
+    safe_pos = jnp.maximum(cur_pos, 0)
+    pg = safe_pos // page_size
+    off = safe_pos % page_size
+    wslot = tables[jnp.arange(b), pg]          # -1 when padding/inactive
+    wgid = gid_tables[jnp.arange(b), pg]
+    big = jnp.int32(2 ** 30)                   # out of bounds => dropped
+    wslot = jnp.where(active & (wslot >= 0), wslot, big)
+    wgid = jnp.where(active & (wgid >= 0), wgid, big)
+
+    x = L.embed(params["embed"], cfg, tokens)
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    mass_sum = jnp.zeros((b, n_row_pages), jnp.float32)
+    n_layers = 0
+    new_kv = {k_: list(v_) for k_, v_ in kv.items()}
+
+    def one_block(xx, slot_p, leaves, kind):
+        """One attention block against its pool leaves (per-repeat slices:
+        [hbm_pages|n_logical, page, KV, D]).  Returns (xx, updated leaves
+        + this layer's page mass)."""
+        kh, vh, khost, vhost = leaves
+        window = cfg.window_size if kind.base == "local" else 0
+        h = L.rms_norm(xx, slot_p["norm1"])
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       slot_p["attn"]["wq"].astype(h.dtype))
+        k_new = jnp.einsum("bsd,dhk->bshk", h,
+                           slot_p["attn"]["wk"].astype(h.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", h,
+                           slot_p["attn"]["wv"].astype(h.dtype))
+        if cfg.qk_norm:
+            q = L.rms_norm(q, slot_p["attn"]["q_norm"])
+            k_new = L.rms_norm(k_new, slot_p["attn"]["k_norm"])
+        q = L.rope(q, cur_pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, cur_pos[:, None], cfg.rope_theta)
+        # write-through: the decoding token's KV lands in its HBM slot
+        # page AND the host backing page before the gather, so the kernel
+        # attends the current token too
+        k1 = k_new[:, 0].astype(kh.dtype)
+        v1 = v_new[:, 0].astype(vh.dtype)
+        kh = kh.at[wslot, off].set(k1, mode="drop")
+        vh = vh.at[wslot, off].set(v1, mode="drop")
+        khost = khost.at[wgid, off].set(k1, mode="drop")
+        vhost = vhost.at[wgid, off].set(v1, mode="drop")
+        ctx, mass = ops.paged_attention(
+            q[:, 0], kh, vh, tables, lengths, window=window,
+            softcap=cfg.softcap, return_mass=True, impl=impl)
+        out = jnp.einsum("bshk,hkd->bsd", ctx[:, None],
+                         slot_p["attn"]["wo"].astype(xx.dtype))
+        xx = xx + out
+        if kind.xattn and cond is not None:
+            hx = L.rms_norm(xx, slot_p["norm_x"])
+            cpos = jnp.arange(cond.shape[1])[None]
+            cmask = jnp.ones((1, 1, cond.shape[1]), bool)
+            o2, _ = L.attention_apply(slot_p["xattn"], cfg, hx, cond,
+                                      cur_pos[:, None], cmask,
+                                      kv_positions=cpos, use_rope=False)
+            xx = xx + o2
+        if kind.moe:
+            h2 = L.rms_norm(xx, slot_p["norm2"])
+            o2, _ = M.moe_apply(slot_p["moe"], cfg, h2, mesh)
+            xx = xx + o2
+        elif cfg.d_ff > 0 and "mlp" in slot_p:
+            h2 = L.rms_norm(xx, slot_p["norm2"])
+            xx = xx + L.mlp_apply(slot_p["mlp"], cfg, h2)
+        xx = shard(xx, ("batch", "seq", "embed"))
+        return xx, (kh, vh, khost, vhost, mass)
+
+    li = 0
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        kinds = [parse_kind(s_) for s_ in pattern]
+        slot_params = params["segments"][si]
+        nslots = len(kinds)
+        seg_leaves = [(kv["k_hbm"][li + j], kv["v_hbm"][li + j],
+                       kv["k_host"][li + j], kv["v_host"][li + j])
+                      for j in range(nslots)]
+
+        # execution order matches decode_step: the whole pattern runs per
+        # repeat (slots inner, repeats outer)
+        def body(xx, per_repeat):
+            slot_ps, slot_lvs = per_repeat
+            new_lvs = []
+            for j, kind in enumerate(kinds):
+                xx, upd = one_block(xx, slot_ps[j], slot_lvs[j], kind)
+                new_lvs.append(upd)
+            return xx, new_lvs
+
+        if cfg.unroll_layers or repeats == 1:
+            reps = []
+            for r in range(repeats):
+                per = jax.tree.map(lambda a: a[r], (slot_params, seg_leaves))
+                x, lvs = body(x, per)
+                reps.append(lvs)
+            stacked = [jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                                    *[rep[j] for rep in reps])
+                       for j in range(nslots)]
+        else:
+            x, stacked = jax.lax.scan(body, x, (slot_params, seg_leaves))
+        for j in range(nslots):
+            kh, vh, khost, vhost, mass = stacked[j]
+            new_kv["k_hbm"][li + j] = kh
+            new_kv["v_hbm"][li + j] = vh
+            new_kv["k_host"][li + j] = khost
+            new_kv["v_host"][li + j] = vhost
+            mass_sum = mass_sum + mass.sum(axis=0)
+            n_layers += repeats
+        li += nslots
+
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x)
+    page_mass = mass_sum / max(1, n_layers)
+    page_mass = jnp.where(active[:, None], page_mass, 0.0)
+    return logits, new_kv, page_mass
 
 
 def init_specs_only(cfg: ModelConfig):

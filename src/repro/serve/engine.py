@@ -1,12 +1,17 @@
-"""Serving engine: batched prefill + decode generation with an attention
-monitor feeding the tiering runtime.
+"""Serving engine: single-stream generation with an attention monitor
+feeding the tiering runtime.
 
 ``generate`` is the plain path (greedy/temperature sampling over
 ``model.decode_step``).  ``monitored_generate`` additionally recomputes the
 attention distribution of one designated layer per step (the "accessed
-bits" of the KV-tiering scheduler -- sampling one layer is the cheap,
-realistic monitor) and returns the per-page attention-mass sequence that
-``repro.memtier`` consumes.
+bits" of the KV-tiering scheduler -- sampling one layer is the cheap
+monitor for the DENSE decode path) and returns the per-page attention-mass
+sequence that ``repro.memtier`` consumes.
+
+The multi-request scheduler (``repro.serve.sched``) only uses
+``make_monitor`` on its dense fallback path: in fully-paged mode the
+masses come from every attention layer of ``model.decode_step_paged``
+itself, so no separate monitor recompute runs there.
 """
 from __future__ import annotations
 

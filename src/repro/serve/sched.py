@@ -5,27 +5,51 @@ module is the layer that owns a shared hybrid-memory pool across many
 in-flight requests and feeds online Cori from the merged traffic.
 
   * ``ContinuousBatcher`` -- the model-backed scheduler: requests join the
-    running batch between decode steps (admission is per-step, and each
-    request's KV occupies whole pages of the shared pool, so joins are
-    page-aligned by construction), decode runs over the whole request
-    set, and requests retire on EOS or length, returning their pages.
+    running batch between decode steps (admission is per-step, prefills
+    of a step's joiners run as ONE packed forward pass, and each
+    request's KV occupies whole bucket-rounded page runs of the shared
+    pool, so joins are page-aligned by construction), decode runs over
+    the whole request set, and requests retire on EOS or length,
+    returning their pages.  In **fully-paged mode** (the default whenever
+    the architecture supports it) the shared pool is the ONLY KV store:
+    every attention layer decodes through ``kernels.paged_attention``
+    over the pool's ``slot_of`` tables, and the per-page attention masses
+    feeding the tuner come from ALL layers of that same decode step.
   * ``TrafficScheduler`` -- the model-free twin for traffic simulation:
     each request is a synthetic per-step page-mass pattern
     (``repro.memtier.workload``), so thousands of scheduler steps replay
-    without touching KV bytes.  Same admission, allocation, merge and
-    retirement path.
+    without touching KV bytes.  Same admission, bucket-rounded
+    allocation, merge and retirement path.
   * ``TrafficMonitor`` -- the traffic-level monitor: merges per-request
     page masses into the global logical-page ID space and drives ONE
     ``TieringManager`` (+ optional ``OnlineTuner``) for the whole mix.
 
-Global page IDs are allocated by ``memtier.SharedPagedPools``; a retiring
-request's IDs are released everywhere (pool slots, manager hotness, the
-tuner's reuse collector) so a recycled ID starts cold.
+Invariants (pinned by tests/test_sched.py):
+
+  * **Page-ID recycling contract.**  A retiring request's global IDs are
+    released *everywhere* -- pool slots, manager hotness, the tuner's
+    reuse collector -- before the allocator may recycle them, so a
+    recycled ID starts cold and never inherits the old owner's reuse
+    chain (``TrafficMonitor.release`` is the single choke point).
+  * **Active-mask semantics.**  Tiering ranks only pages of in-flight
+    requests (``pools.allocated_mask``); bucket-tail pages a request
+    holds but has not yet written are allocated (and thus rankable) but
+    carry no mass, so they tier out naturally.
+  * **Token parity.**  A request's emitted stream is identical to
+    per-request ``engine.generate`` with the same prompt/key -- across
+    dense vs fully-paged decode, staggered admission, batched prefill,
+    row reuse and temperature sampling.
+  * **Residency before decode.**  In fully-paged mode every page the
+    step's attention can touch is made HBM-resident first
+    (``ensure_resident``, charged as on-demand fetch misses); the kernel
+    never gathers a host-only page.  Admission is gated so the in-flight
+    footprint fits the HBM slot pool.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -36,7 +60,8 @@ from repro.core import cori
 from repro.core.traffic import RequestSpec
 from repro.kernels import ops
 from repro.memtier import workload as W
-from repro.memtier.tiering import SharedPagedPools, TieringManager
+from repro.memtier.tiering import (SharedPagedPools, TieringManager,
+                                   bucket_pages)
 from repro.models import model as mdl
 from repro.serve import engine as E
 
@@ -125,7 +150,8 @@ class Request:
     # -- runtime state (owned by the batcher) --
     row: int = -1
     gids: Optional[np.ndarray] = None
-    n_pages: int = 0
+    n_pages: int = 0                   # exact page footprint
+    n_alloc: int = 0                   # bucket-rounded pages actually held
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     _key: Optional[jax.Array] = None
@@ -139,41 +165,64 @@ class Request:
 class ContinuousBatcher:
     """Continuous batching: a fixed-capacity request-set decoded together.
 
-    ``max_active`` rows share one packed cache of ``max_len`` positions;
-    requests are admitted into free rows between decode steps (their KV
-    pages allocated from the shared pool at page-aligned positions) and
-    retired on EOS or length (pages released).  Per-request sampling keys
-    follow exactly ``engine.generate``'s schedule, so a request's token
-    stream is identical to running ``generate`` alone with the same
-    prompt/key -- the property the traffic benchmark pins down.
+    ``max_active`` rows are decoded together; requests are admitted into
+    free rows between decode steps and retired on EOS or length (pages
+    released).  A step's joiners are prefilled as ONE packed right-padded
+    forward pass (``model.prefill_batched``) whenever the architecture
+    has no recurrent state.  Per-request sampling keys follow exactly
+    ``engine.generate``'s schedule, so a request's token stream is
+    identical to running ``generate`` alone with the same prompt/key --
+    the property the traffic benchmark pins down.
 
-    With a ``TrafficMonitor``, each step recomputes the monitor layer's
-    per-request page masses (``engine.make_monitor``), merges them into
-    the global page-ID space, and lets the manager/tuner tier the shared
-    pool; with ``mirror_pages=True`` (physical pools) the monitor layer's
-    KV pages are write-through mirrored so ``kernels.paged_attention``
-    can gather a request's context straight from the shared HBM pool
-    (``paged_context``).
+    Two decode data paths:
+
+    * **Fully paged** (``paged=True``, the default whenever
+      ``model.paged_supported(cfg)`` and a monitor is attached): the
+      shared pool is the ONLY KV store.  Each request's KV occupies a
+      bucket-rounded run of global pages (``memtier.bucket_pages``), and
+      every attention layer decodes through ``kernels.paged_attention``
+      over the pool's ``slot_of`` tables (``model.decode_step_paged``).
+      There is no dense per-row ``max_len`` cache at all; peak cache
+      memory is the sum of the in-flight bucket-rounded footprints.  The
+      per-page masses feeding the tuner come from ALL attention layers
+      of the decode step itself (head-normalised, layer-averaged) -- the
+      true aggregate traffic, not a one-layer sample.  Before each step,
+      every page the attention can touch is demand-fetched into HBM
+      (charged as misses); admission is gated so the in-flight exact
+      footprint fits the HBM slot pool.
+
+    * **Dense** (``paged=False``; the fallback for MLA / recurrent /
+      prefix architectures): ``max_active`` rows share one packed cache
+      of ``max_len`` positions, the monitor layer's masses are
+      recomputed per step (``engine.make_monitor``) and, with
+      ``mirror_pages=True``, that layer's pages are write-through
+      mirrored into the shared pool for ``paged_context``.
     """
 
     def __init__(self, params, cfg, *, max_active: int = 4,
                  max_len: int = 128, page_size: int = 16,
                  monitor: Optional[TrafficMonitor] = None,
-                 mirror_pages: bool = False):
+                 mirror_pages: bool = False,
+                 paged: Optional[bool] = None,
+                 paged_impl: str = "reference"):
         self.params, self.cfg = params, cfg
         self.page_size = page_size
         self.max_len = -(-max_len // page_size) * page_size
         self.max_active = max_active
         self.prefix = cfg.prefix_len or 0
         self.monitor = monitor
-        self.mirror_pages = mirror_pages and monitor is not None \
-            and monitor.pools.physical
         self.n_row_pages = self.max_len // page_size
+        can_page = monitor is not None and mdl.paged_supported(cfg)
+        self.paged = can_page if paged is None else bool(paged)
+        if self.paged and not can_page:
+            raise ValueError("fully-paged decode needs a TrafficMonitor and "
+                             f"an all-attention config ({cfg.name})")
+        # the write-through mirror needs the LEGACY single-layer arrays;
+        # a layered-only pool is physical but has no k_host/k_hbm pair
+        self.mirror_pages = (not self.paged) and mirror_pages \
+            and monitor is not None and monitor.pools.k_host is not None
+        self._batched_prefill = mdl.batched_prefill_supported(cfg)
 
-        # prefill produces float32 caches on this substrate; the packed
-        # cache must match or row writes would silently downcast
-        self.cache = mdl.init_cache(cfg, max_active, self.max_len,
-                                    dtype=jnp.float32)
         self.tok = jnp.zeros((max_active, 1), jnp.int32)
         self.pos = jnp.zeros((max_active,), jnp.int32)
         self.rows_free = list(range(max_active - 1, -1, -1))
@@ -182,75 +231,190 @@ class ContinuousBatcher:
         self.step_idx = 0
         self.completed: List[Request] = []
 
-        self._step_fn = jax.jit(
-            lambda c, t, p: mdl.decode_step(params, cfg, c, t, p))
+        if self.paged:
+            pools = monitor.pools
+            if pools.kv_layers is None:
+                pools.attach_layered_kv(
+                    [r for (_, _, r, _, _) in mdl.attn_slot_meta(cfg)],
+                    page_size=page_size, kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.head_dim, dtype=jnp.float32)
+            self.cache = None
+            self._hbm_need = 0     # exact pages the in-flight set can touch
+            self._gid_tables = np.full((max_active, self.n_row_pages), -1,
+                                       np.int32)
+            # the kv pytree is dead after the call (set_kv replaces it):
+            # donate it so XLA updates the pool buffers in place instead
+            # of copying the whole layered store every step
+            self._paged_fn = jax.jit(functools.partial(
+                mdl.decode_step_paged, params, cfg,
+                page_size=page_size, impl=paged_impl), donate_argnums=(0,))
+        else:
+            # prefill produces float32 caches on this substrate; the packed
+            # cache must match or row writes would silently downcast
+            self.cache = mdl.init_cache(cfg, max_active, self.max_len,
+                                        dtype=jnp.float32)
+            self._step_fn = jax.jit(
+                lambda c, t, p: mdl.decode_step(params, cfg, c, t, p))
         self._mon_fn = (E.make_monitor(params, cfg, page_size,
                                        self.n_row_pages)
-                        if monitor is not None else None)
+                        if monitor is not None and not self.paged else None)
         if self.monitor is not None:
             self._si, self._sj = E.monitor_slot(cfg)
 
     # -- admission -----------------------------------------------------------
+    def _pages_exact(self, req: Request) -> int:
+        return -(-(self.prefix + req.total_len) // self.page_size)
+
+    def _pages_alloc(self, req: Request) -> int:
+        """Bucket-rounded allocation size (power-of-two pages, capped at
+        one row): what the request actually holds in the shared pool."""
+        if self.monitor is None:
+            return 0
+        return bucket_pages(self._pages_exact(req), cap=self.n_row_pages)
+
     def submit(self, req: Request) -> None:
         if self.prefix + req.total_len > self.max_len:
             raise ValueError(f"request {req.rid} needs "
                              f"{self.prefix + req.total_len} positions, "
                              f"cache rows hold {self.max_len}")
         if self.monitor is not None:
-            n_pages = -(-(self.prefix + req.total_len) // self.page_size)
+            n_pages = self._pages_alloc(req)
             if n_pages > self.monitor.pools.n_logical:
                 # would head-of-line-block the queue forever: alloc can
                 # never succeed, not even with the pool fully drained
                 raise ValueError(
                     f"request {req.rid} needs {n_pages} pages, the logical "
                     f"space holds {self.monitor.pools.n_logical}")
+            if self.paged and \
+                    self._pages_exact(req) > self.monitor.pools.hbm_pages:
+                raise ValueError(
+                    f"request {req.rid} touches {self._pages_exact(req)} "
+                    f"pages, the HBM slot pool holds "
+                    f"{self.monitor.pools.hbm_pages}: it can never decode "
+                    "fully paged")
         self.queue.append(req)
 
     def _admit(self) -> List[Tuple[int, int]]:
-        emitted: List[Tuple[int, int]] = []
+        batch: List[Request] = []
         while self.queue and self.rows_free:
             req = self.queue[0]
-            n_pages = -(-(self.prefix + req.total_len) // self.page_size)
+            n_exact = self._pages_exact(req)
+            n_alloc = self._pages_alloc(req)
             gids = None
             if self.monitor is not None:
-                gids = self.monitor.pools.alloc(n_pages, req.rid)
+                if self.paged and (self._hbm_need + n_exact
+                                   > self.monitor.pools.hbm_pages):
+                    break              # head-of-line: keep arrival order
+                gids = self.monitor.pools.alloc(n_alloc, req.rid)
                 if gids is None:       # head-of-line: keep arrival order
-                    return emitted
+                    break
             self.queue.popleft()
             row = self.rows_free.pop()
-            req.row, req.gids, req.n_pages = row, gids, n_pages
+            req.row, req.gids, req.n_pages = row, gids, n_exact
+            req.n_alloc = n_alloc
+            if self.paged:
+                self._hbm_need += n_exact
+            batch.append(req)
+        if not batch:
+            return []
+        return self._prefill(batch)
 
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, cache1 = mdl.prefill(self.params, self.cfg, prompt)
-            cache1 = mdl.pad_cache(cache1, self.cfg, self.max_len)
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, row].set(one[:, 0]),
-                self.cache, cache1)
-            req._key = req.key if req.key is not None else jax.random.PRNGKey(0)
+    def _prefill(self, batch: List[Request]) -> List[Tuple[int, int]]:
+        """Prefill a step's joiners as one packed forward pass, seed their
+        rows/pages, and sample each first token."""
+        plens = [len(r.prompt) for r in batch]
+        if self._batched_prefill:
+            smax = max(plens)
+            toks = np.zeros((len(batch), smax), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, : plens[i]] = r.prompt
+            logits_b, cache_b = mdl.prefill_batched(
+                self.params, self.cfg, jnp.asarray(toks),
+                jnp.asarray(plens, jnp.int32))
+        else:               # recurrent state: one request at a time
+            logits_b, cache_b = None, None
+
+        emitted: List[Tuple[int, int]] = []
+        for bi, req in enumerate(batch):
+            row, plen = req.row, plens[bi]
+            if self._batched_prefill:
+                logits = logits_b[bi: bi + 1]
+                if self.paged:
+                    self._write_prefill_pages(cache_b, bi, req, plen)
+                else:
+                    one = mdl.row_cache_from_batched(cache_b, self.cfg, bi,
+                                                     plen, self.max_len)
+                    self.cache = jax.tree.map(
+                        lambda full, o: full.at[:, row].set(o),
+                        self.cache, one)
+            else:
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, cache1 = mdl.prefill(self.params, self.cfg, prompt)
+                cache1 = mdl.pad_cache(cache1, self.cfg, self.max_len)
+                self.cache = jax.tree.map(
+                    lambda full, o: full.at[:, row].set(o[:, 0]),
+                    self.cache, cache1)
+            req._key = (req.key if req.key is not None
+                        else jax.random.PRNGKey(0))
             tok = E._sample(logits[:, 0], req._key, req.temperature)
             req.tokens.append(int(tok[0]))
             emitted.append((req.rid, int(tok[0])))
             self.tok = self.tok.at[row].set(tok)
-            self.pos = self.pos.at[row].set(self.prefix + len(req.prompt))
+            self.pos = self.pos.at[row].set(self.prefix + plen)
             self.active[row] = req
             if self.mirror_pages:
-                plen = self.prefix + len(req.prompt)
-                self._mirror(req, range(-(-plen // self.page_size)))
+                self._mirror(req, range(-(-(self.prefix + plen)
+                                          // self.page_size)))
             if req.max_new_tokens <= 1 or (req.eos_id is not None
                                            and req.tokens[-1] == req.eos_id):
                 self._retire(req)
         return emitted
 
+    def _write_prefill_pages(self, cache_b, bi: int, req: Request,
+                             plen: int) -> None:
+        """Scatter one joiner's prefilled KV (every attention layer) into
+        its pages of the shared pool's host leaves, then place them in HBM
+        (initial placement, not charged as misses)."""
+        pools = self.monitor.pools
+        ps = self.page_size
+        n = -(-plen // ps)
+        gids = jnp.asarray(req.gids[:n], jnp.int32)
+        kv = pools.kv_view()
+        for li, (si, j, repeats, _, _) in enumerate(
+                mdl.attn_slot_meta(self.cfg)):
+            e = cache_b["segments"][si][j]
+            for name in ("k", "v"):
+                a = e[name][:, bi]                      # [R, smax, KV, D]
+                pad = n * ps - a.shape[1]
+                if pad > 0:
+                    a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                pages = a[:, : n * ps].reshape(
+                    repeats, n, ps, a.shape[2], a.shape[3])
+                key = f"{name}_host"
+                kv[key][li] = kv[key][li].at[:, gids].set(pages)
+        pools.set_kv(kv)
+        pools.ensure_resident(req.gids[:n])
+        self._gid_tables[req.row, : req.n_alloc] = req.gids
+        self._gid_tables[req.row, req.n_alloc:] = -1
+
     # -- the per-step scheduler loop -----------------------------------------
     def step(self) -> List[Tuple[int, int]]:
-        """One scheduler step: admit, monitor+tier, decode the request set,
-        sample, retire.  Returns the (rid, token) pairs emitted this step,
-        including the prefill-sampled first token of newly admitted
-        requests."""
+        """One scheduler step: admit (one packed prefill), monitor+tier,
+        decode the request set, sample, retire.  Returns the (rid, token)
+        pairs emitted this step, including the prefill-sampled first token
+        of newly admitted requests."""
         emitted = self._admit()
         self.step_idx += 1
         if not self.active:
             return emitted
+        if self.paged:
+            emitted += self._step_paged()
+        else:
+            emitted += self._step_dense()
+        return emitted
+
+    def _step_dense(self) -> List[Tuple[int, int]]:
+        emitted: List[Tuple[int, int]] = []
         if self.monitor is not None:
             masses = np.asarray(self._mon_fn(self.cache, self.tok, self.pos))
             merged = self.monitor.merge(
@@ -279,6 +443,61 @@ class ContinuousBatcher:
         self.tok = new_tok
         return emitted
 
+    def _step_paged(self) -> List[Tuple[int, int]]:
+        """Fully-paged decode step: demand-fetch the in-flight working
+        set, run every attention layer off the shared slot pool, feed the
+        monitor the ALL-layer masses, sample, retire."""
+        pools = self.monitor.pools
+        mgr = self.monitor.manager
+        pos_np = np.asarray(self.pos)
+
+        # every page this step's attention can touch (incl. the write
+        # page) must be HBM-resident; re-fetches after eviction are
+        # on-demand host reads and charged as misses
+        need: List[np.ndarray] = []
+        for req in self.active.values():
+            n = -(-(int(pos_np[req.row]) + 1) // self.page_size)
+            need.append(req.gids[:n])
+        fetched = pools.ensure_resident(np.concatenate(need))
+        mgr.misses += fetched
+        mgr.modeled_time += fetched * mgr.cfg.miss_penalty
+
+        # page tables are rebuilt each step: tiering may have re-slotted
+        # any resident page since the last one
+        tables = np.full((self.max_active, self.n_row_pages), -1, np.int32)
+        cur = np.full((self.max_active,), -1, np.int32)
+        for row, req in self.active.items():
+            tables[row, : req.n_alloc] = pools.table(req.gids)
+            cur[row] = pos_np[row]
+
+        logits, kv, masses = self._paged_fn(
+            pools.kv_view(), jnp.asarray(tables),
+            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur))
+        pools.set_kv(kv)
+        masses = np.asarray(masses)
+        merged = self.monitor.merge(
+            [(r.gids[: r.n_pages], masses[r.row, : r.n_pages])
+             for r in self.active.values()])
+        self.monitor.on_step(merged, n_active=len(self.active))
+
+        self.pos = self.pos + 1
+        emitted: List[Tuple[int, int]] = []
+        new_tok = self.tok
+        for row, req in list(self.active.items()):
+            req._key = jax.random.fold_in(req._key, req._i)
+            req._i += 1
+            tok = E._sample(logits[row: row + 1, 0], req._key,
+                            req.temperature)
+            req.tokens.append(int(tok[0]))
+            new_tok = new_tok.at[row].set(tok)
+            emitted.append((req.rid, int(tok[0])))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and req.tokens[-1] == req.eos_id)):
+                self._retire(req)
+        self.tok = new_tok
+        return emitted
+
     def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:
         """Drive until every submitted request completed (or the step
         budget runs out).  Returns rid -> emitted tokens."""
@@ -293,6 +512,9 @@ class ContinuousBatcher:
         del self.active[req.row]
         self.rows_free.append(req.row)
         self.completed.append(req)
+        if self.paged:
+            self._hbm_need -= req.n_pages
+            self._gid_tables[req.row, :] = -1
         if self.monitor is not None:
             self.monitor.release(req.gids)
 
@@ -313,27 +535,36 @@ class ContinuousBatcher:
         """Monitor-layer attention context for one in-flight request,
         gathered by ``kernels.paged_attention`` *from the shared HBM pool*
         through the request's page table (``slot_of`` indirection).  Pages
-        are demand-fetched first; returns (context [1,H,D], fetched)."""
-        if not self.mirror_pages:
-            raise ValueError("paged_context needs mirror_pages=True over "
-                             "physical pools: without the write-through "
-                             "mirror the shared pool holds no KV data")
+        are demand-fetched first; returns (context [1,H,D], fetched).
+
+        In fully-paged mode the pool IS the KV store, so this reads the
+        monitor slot's layered HBM leaf; in dense mode it needs the
+        ``mirror_pages`` write-through."""
+        if not (self.paged or self.mirror_pages):
+            raise ValueError("paged_context needs fully-paged decode or "
+                             "mirror_pages=True over physical pools: "
+                             "otherwise the shared pool holds no KV data")
         req = next((r for r in self.active.values() if r.rid == rid), None)
         if req is None:
             raise KeyError(f"request {rid} is not in flight")
         length = int(np.asarray(self.pos)[req.row])
         n = -(-length // self.page_size)
         gids = req.gids[:n]
-        fetched = self.monitor.pools.ensure_resident(gids)
+        pools = self.monitor.pools
+        fetched = pools.ensure_resident(gids)
         # demand-fetched pages are on-demand host reads: charge them
         mgr = self.monitor.manager
         mgr.misses += fetched
         mgr.modeled_time += fetched * mgr.cfg.miss_penalty
-        table = jnp.asarray(self.monitor.pools.table(gids), jnp.int32)[None]
+        table = jnp.asarray(pools.table(gids), jnp.int32)[None]
         lengths = jnp.asarray([length], jnp.int32)
-        out = ops.paged_attention(q, self.monitor.pools.k_hbm,
-                                  self.monitor.pools.v_hbm, table, lengths,
-                                  impl=impl)
+        if self.paged:
+            li = mdl.attn_slot_index(self.cfg, self._si, self._sj)
+            k_hbm = pools.kv_layers["k_hbm"][li][-1]
+            v_hbm = pools.kv_layers["v_hbm"][li][-1]
+        else:
+            k_hbm, v_hbm = pools.k_hbm, pools.v_hbm
+        out = ops.paged_attention(q, k_hbm, v_hbm, table, lengths, impl=impl)
         return out, fetched
 
 
@@ -377,16 +608,26 @@ class _SynthActive:
 
 class TrafficScheduler:
     """Model-free continuous batching over a ``core.traffic`` request
-    stream: admission (Poisson arrivals, FIFO head-of-line), page-aligned
-    allocation from the shared pool, per-step mass merge through the
-    ``TrafficMonitor``, retirement on length.  Deterministic given the
-    stream -- and admission never depends on residency or period, so
-    fixed-period replays of the same stream are directly comparable (the
-    brute-force sweep the benchmark ranks the online tuner against)."""
+    stream: admission (Poisson arrivals, FIFO head-of-line), bucket-
+    rounded page-aligned allocation from the shared pool, per-step mass
+    merge through the ``TrafficMonitor``, retirement on length.
+    Deterministic given the stream -- and admission never depends on
+    residency or period, so fixed-period replays of the same stream are
+    directly comparable (the brute-force sweep the benchmark ranks the
+    online tuner against).
+
+    Allocation mirrors the fully-paged batcher: a request holds
+    ``bucket_pages(exact, cap=row_pages)`` global pages (its mass pattern
+    only ever touches the exact footprint; the bucket tail is allocation
+    slack).  ``row_pages`` defaults to the dense provisioning a packed
+    ``max_len`` cache would need for this stream -- the longest request's
+    page count -- so ``dense_cache_pages`` is the apples-to-apples
+    baseline ``peak_cache_pages`` is compared against."""
 
     def __init__(self, specs: Sequence[RequestSpec], monitor: TrafficMonitor,
                  *, page_size: int = 16, max_active: int = 8,
-                 kinds: Optional[Dict[str, Callable]] = None):
+                 kinds: Optional[Dict[str, Callable]] = None,
+                 bucket: bool = True, row_pages: Optional[int] = None):
         self.pending = collections.deque(
             sorted(specs, key=lambda s: (s.arrival, s.rid)))
         self.monitor = monitor
@@ -395,24 +636,45 @@ class TrafficScheduler:
         self.kinds = dict(WORKLOAD_KINDS)
         if kinds:
             self.kinds.update(kinds)
+        self.bucket = bucket
+        self.row_pages = row_pages if row_pages is not None else max(
+            (s.n_pages(page_size) for s in specs), default=1)
         self.active: List[_SynthActive] = []
         self.now = 0
         self.admitted = 0
         self.completed = 0
         self.rejected = 0
 
+    @property
+    def peak_cache_pages(self) -> int:
+        """Peak pages simultaneously allocated (bucket-rounded rows)."""
+        return self.monitor.pools.peak_allocated
+
+    @property
+    def dense_cache_pages(self) -> int:
+        """What the dense packed-cache layout provisions up front:
+        ``max_active`` rows of ``row_pages`` each, held for the whole
+        run regardless of occupancy."""
+        return self.max_active * self.row_pages
+
+    def _pages_alloc(self, n_exact: int) -> int:
+        if not self.bucket:
+            return n_exact
+        return bucket_pages(n_exact, cap=max(self.row_pages, n_exact))
+
     def step(self) -> None:
         while (self.pending and self.pending[0].arrival <= self.now
                and len(self.active) < self.max_active):
             spec = self.pending[0]
             n_pages = spec.n_pages(self.page_size)
-            if n_pages > self.monitor.pools.n_logical:
+            n_alloc = self._pages_alloc(n_pages)
+            if n_alloc > self.monitor.pools.n_logical:
                 # can never fit, not even fully drained: dropping it is the
                 # only alternative to blocking the queue forever
                 self.pending.popleft()
                 self.rejected += 1
                 continue
-            gids = self.monitor.pools.alloc(n_pages, spec.rid)
+            gids = self.monitor.pools.alloc(n_alloc, spec.rid)
             if gids is None:           # head-of-line: keep arrival order
                 break
             self.pending.popleft()
@@ -428,8 +690,11 @@ class TrafficScheduler:
         # batcher): an empty lull's near-zero cost would read as a phase
         # change and churn the tuner through spurious re-profiles
         if self.active:
+            # mass patterns span the exact footprint only; a bucket's
+            # tail pages are allocation slack and never accrue mass
             merged = self.monitor.merge(
-                [(a.gids, a.pattern[a.t]) for a in self.active])
+                [(a.gids[: a.pattern.shape[1]], a.pattern[a.t])
+                 for a in self.active])
             self.monitor.on_step(merged, n_active=len(self.active))
         self.now += 1
 

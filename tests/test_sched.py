@@ -376,7 +376,9 @@ def test_batcher_retires_on_eos():
 def test_batcher_paged_kernel_gathers_shared_pool():
     """kernels.paged_attention over the shared HBM pool (slot_of
     indirection through a request's page table) matches the host-pool
-    reference for an in-flight request with interleaved allocations."""
+    reference for an in-flight request with interleaved allocations.  In
+    fully-paged mode the host copy lives in the monitor slot's layered
+    leaf (the pool IS the KV store)."""
     import jax
     import jax.numpy as jnp
     import repro.configs as C
@@ -389,7 +391,8 @@ def test_batcher_paged_kernel_gathers_shared_pool():
     rng = np.random.default_rng(1)
     mon = _tiny_serving_stack(cfg, params)
     b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
-                          monitor=mon, mirror_pages=True)
+                          monitor=mon)
+    assert b.paged, "gemma3 (all-attention) must take the fully-paged path"
     for i in range(2):
         prompt = rng.integers(0, cfg.vocab_size, size=7 + i).astype(np.int32)
         b.submit(Request(rid=i, prompt=prompt, max_new_tokens=8,
@@ -397,6 +400,9 @@ def test_batcher_paged_kernel_gathers_shared_pool():
     for _ in range(4):
         b.step()
     page = b.page_size
+    li = mdl.attn_slot_index(cfg, b._si, b._sj)
+    k_host = mon.pools.kv_layers["k_host"][li][-1]
+    v_host = mon.pools.kv_layers["v_host"][li][-1]
     for req in list(b.active.values()):
         q = jax.random.normal(jax.random.PRNGKey(40 + req.rid),
                               (1, cfg.num_heads, cfg.head_dim))
@@ -404,11 +410,284 @@ def test_batcher_paged_kernel_gathers_shared_pool():
         length = int(np.asarray(b.pos)[req.row])
         n = -(-length // page)
         tbl = jnp.asarray(req.gids[:n], jnp.int32)[None]
-        ref = ops.paged_attention(q, mon.pools.k_host, mon.pools.v_host,
+        ref = ops.paged_attention(q, k_host, v_host,
                                   tbl, jnp.asarray([length], jnp.int32),
                                   impl="reference")
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-5)
+
+
+def test_batcher_dense_and_paged_paths_token_identical():
+    """The fully-paged decode (every layer off the shared slot pool) and
+    the dense per-request-row path emit bit-identical token streams for
+    the same request set -- the tentpole parity bar.  Includes a prompt
+    with plen % window >= 2 (the window-ring case) and temperature
+    sampling."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (10, 6, 9)]
+
+    def run(paged):
+        b = ContinuousBatcher(params, cfg, max_active=2, max_len=32,
+                              page_size=4,
+                              monitor=_tiny_serving_stack(cfg, params),
+                              mirror_pages=not paged, paged=paged)
+        assert b.paged == paged
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=5 + i,
+                             key=jax.random.PRNGKey(20 + i),
+                             temperature=0.0 if i == 0 else 0.8))
+        return b.run()
+
+    dense, paged = run(False), run(True)
+    assert dense == paged, "dense and fully-paged decode must agree"
+
+
+def test_paged_decode_multi_repeat_layer_order():
+    """With repeats > 1 the paged decode must execute the whole pattern
+    per repeat (matching decode_step's scan), not each slot across all
+    its repeats -- pinned against per-request generate on a 2-repeat
+    variant of the gemma3 pattern (stacked [R, ...] pool leaves driven
+    through lax.scan)."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    cfg = dataclasses.replace(
+        cfg, segments=tuple((pat, 2) for pat, _ in cfg.segments))
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (10, 6)]
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=_tiny_serving_stack(cfg, params))
+    assert b.paged
+    for i, p in enumerate(prompts):
+        b.submit(Request(rid=i, prompt=p, max_new_tokens=6,
+                         key=jax.random.PRNGKey(i), temperature=0.5 * i))
+    got = b.run()
+    for i, p in enumerate(prompts):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None], steps=6,
+                                  temperature=0.5 * i,
+                                  key=jax.random.PRNGKey(i)))[0].tolist()
+        assert got[i] == ref, f"request {i} diverged with repeats=2"
+
+
+def test_admission_prefills_in_one_packed_pass(monkeypatch):
+    """Joiners of one scheduler step share a single batched prefill
+    forward pass (no per-request prefill loop)."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve import sched as S
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    calls = {"batched": 0, "single": 0}
+    orig_b, orig_1 = mdl.prefill_batched, mdl.prefill
+
+    def count_b(*a, **k):
+        calls["batched"] += 1
+        return orig_b(*a, **k)
+
+    def count_1(*a, **k):
+        calls["single"] += 1
+        return orig_1(*a, **k)
+
+    monkeypatch.setattr(mdl, "prefill_batched", count_b)
+    monkeypatch.setattr(mdl, "prefill", count_1)
+    b = S.ContinuousBatcher(params, cfg, max_active=3, max_len=32,
+                            page_size=4,
+                            monitor=_tiny_serving_stack(cfg, params,
+                                                        n_logical=64,
+                                                        hbm=16))
+    for i in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, size=5 + i).astype(np.int32)
+        b.submit(S.Request(rid=i, prompt=prompt, max_new_tokens=3))
+    b.step()
+    assert len(b.active) + sum(r.done for r in b.completed) == 3
+    assert calls == {"batched": 1, "single": 0}, \
+        "three same-step joiners must share one packed prefill"
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed allocation (property tests)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_pages_rounding():
+    from repro.memtier import bucket_pages
+    assert [bucket_pages(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    assert bucket_pages(9, cap=10) == 10
+    assert bucket_pages(10, cap=10) == 10
+    with pytest.raises(ValueError):
+        bucket_pages(0)
+    with pytest.raises(ValueError):
+        bucket_pages(11, cap=10)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_bucketed_allocation_never_exceeds_bucket_sum(seed):
+    """Property: at every scheduler step, the pages held by the pool
+    equal the sum of the in-flight requests' bucket-rounded footprints --
+    never more -- and the peak never exceeds the bucket-rounded sum of
+    any co-resident set."""
+    from repro.memtier import bucket_pages
+    specs = poisson_request_stream(
+        60, 0.3, {"sink": 0.5, "random": 0.5}, prompt_len=(4, 90),
+        new_tokens=(8, 70), seed=seed)
+    pools = SharedPagedPools.create(256, 16)
+    mgr = TieringManager(256, CFG)
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr),
+                             page_size=16, max_active=6)
+    cap = sched.row_pages
+    for _ in range(300):
+        sched.step()
+        expect = sum(bucket_pages(a.pattern.shape[1], cap=max(cap,
+                                                              a.pattern.shape[1]))
+                     for a in sched.active)
+        held = pools.n_logical - pools.free_pages
+        assert held == expect == pools.allocated_pages
+    assert sched.completed == sched.admitted
+    assert pools.peak_allocated <= sum(
+        bucket_pages(s.n_pages(16), cap=max(cap, s.n_pages(16)))
+        for s in specs)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_bucketed_retire_readmit_recycles_without_leak(seed):
+    """Property: draining the stream returns every bucket-rounded page
+    (allocated_pages == 0, free_pages == n_logical), and a second stream
+    over the same pool admits cleanly from recycled IDs."""
+    pools = SharedPagedPools.create(128, 16)
+    mgr = TieringManager(128, CFG)
+    mon = TrafficMonitor(pools, mgr)
+    for round_ in range(2):
+        specs = poisson_request_stream(
+            40, 0.4, {"sink": 1.0}, prompt_len=(4, 60), new_tokens=(8, 40),
+            seed=seed + round_)
+        sched = TrafficScheduler(specs, mon, page_size=16, max_active=5)
+        sched.run(400)
+        assert sched.completed == sched.admitted == len(specs)
+        assert pools.free_pages == pools.n_logical, "bucket pages leaked"
+        assert pools.allocated_pages == 0
+
+
+def test_paged_attention_window_and_softcap_match_reference():
+    """The Pallas kernel's sliding-window mask and tanh softcap (the
+    local-layer path of fully-paged decode) match the jnp oracle."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(3)
+    n, page, kvh, d, h = 8, 4, 2, 8, 4
+    k = jax.random.normal(key, (n, page, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, page, kvh, d))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (2, h, d))
+    tbl = jnp.asarray([[2, 0, 4, 6], [5, 1, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([4 * page - 1, 2 * page], jnp.int32)
+    for window in (3, 8):
+        for softcap in (0.0, 5.0):
+            out = ops.paged_attention(q, k, v, tbl, lengths, window=window,
+                                      softcap=softcap, impl="interpret")
+            ref = ops.paged_attention(q, k, v, tbl, lengths, window=window,
+                                      softcap=softcap, impl="reference")
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-5)
+            assert not np.isnan(np.asarray(out)).any()
+
+
+def test_paged_masses_reach_tuner_from_all_layers():
+    """In fully-paged mode the reuse signal comes from the decode step
+    itself (all attention layers, head-normalised): the tuner's collector
+    must accumulate samples without engine.make_monitor ever running."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    mon = _tiny_serving_stack(cfg, params)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon)
+    assert b.paged and b._mon_fn is None
+    b.submit(Request(rid=0,
+                     prompt=rng.integers(0, cfg.vocab_size, size=8)
+                     .astype(np.int32), max_new_tokens=10))
+    b.run()
+    assert mon.tuner.collector.num_samples > 0, \
+        "all-layer masses never reached the reuse collector"
+    assert mon.manager.hits > 0
+
+
+def test_relative_mass_threshold_is_occupancy_stable():
+    """`OnlineTuner(rel_threshold=True)` cuts accessed sets at a fraction
+    of the step's peak mass: scaling every mass down (more layers / more
+    in-flight requests diluting the normalised signal) must not change
+    which pages count as accessed, while the absolute cut loses them."""
+    from repro.core import OnlineTuner, StreamingReuseCollector
+
+    mass = np.zeros(16, np.float32)
+    mass[[2, 5]] = [1.0, 0.4]
+    for scale in (1.0, 0.01):
+        rel = StreamingReuseCollector(16, bin_width=1)
+        rel.observe_mass(mass * scale, 0.2, relative=True)
+        rel.observe_mass(mass * scale, 0.2, relative=True)
+        assert rel.num_samples == 2, f"relative cut drifted at x{scale}"
+    absd = StreamingReuseCollector(16, bin_width=1)
+    absd.observe_mass(mass * 0.01, 0.2)
+    absd.observe_mass(mass * 0.01, 0.2)
+    assert absd.num_samples == 0, "absolute cut should lose diluted masses"
+
+    tuner = OnlineTuner(16, rel_threshold=True, access_threshold=0.2,
+                        bin_width=1)
+    tuner.on_step(page_mass=mass * 0.01, cost=1.0)
+    tuner.on_step(page_mass=mass * 0.01, cost=1.0)
+    assert tuner.collector.num_samples == 2
+
+
+def test_layered_only_pool_rejects_legacy_mirror():
+    """A pool with only layered leaves (no legacy k_host pair) is
+    physical, but the dense write-through mirror must not engage on it --
+    mirror_pages quietly stays off instead of crashing in write_page."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    pools = SharedPagedPools.create(48, 16)      # bare: no legacy arrays
+    mgr = TieringManager(48, dataclasses.replace(CFG, page_size=4,
+                                                 hbm_pages=16))
+    mon = TrafficMonitor(pools, mgr)
+    paged = ContinuousBatcher(params, cfg, max_active=1, max_len=32,
+                              page_size=4, monitor=mon)
+    assert paged.paged and pools.physical
+    dense = ContinuousBatcher(params, cfg, max_active=1, max_len=32,
+                              page_size=4, monitor=mon, mirror_pages=True,
+                              paged=False)
+    assert not dense.mirror_pages, "no legacy arrays: mirror must not arm"
+    dense.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=2))
+    dense.run()          # would crash in write_page without the guard
+    assert pools.free_pages == pools.n_logical
 
 
 def test_paged_attention_tolerates_ragged_minus_one_padding():
