@@ -57,6 +57,22 @@ def smoke() -> None:
         "bucketed paged rows must cut peak cache memory by >= 25% vs the " \
         f"dense max_len provisioning (got {tr['cache_memory']['reduction']:.1%})"
 
+    # serving throughput: the macro-step hot loop must not regress below
+    # the per-token paged path, with the four-way bit-parity bar intact
+    # (results land in BENCH_serving.json for cross-PR tracking)
+    with Timer() as t:
+        sp = traffic.serving_perf(quick=True)
+    print(f"smoke_serving,{t.us:.0f},"
+          f"macro_speedup={sp['speedup_macro_vs_per_token']:.2f}x;"
+          f"macro_tok_s={sp['modes']['macro']['tokens_per_sec']:.0f};"
+          f"parity={sp['token_identical_all_modes']}")
+    assert sp["token_identical_all_modes"], \
+        "macro/paged/dense decode diverged from per-request generate"
+    assert (sp["modes"]["macro"]["tokens_per_sec"]
+            >= sp["modes"]["paged"]["tokens_per_sec"]), \
+        "macro-step decode must be at least as fast as the per-token " \
+        f"paged path (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
@@ -129,6 +145,13 @@ def main(argv=None) -> None:
           f"vs_best_fixed_steady={tr['online_vs_best_fixed_steady']:.3f};"
           f"token_identical={tr['token_parity']['token_identical']};"
           f"completed={tr['requests']['completed']}")
+
+    with Timer() as t:
+        sp = traffic.serving_perf(quick=q)
+    print(f"serving_macro,{t.us:.0f},"
+          f"macro_speedup={sp['speedup_macro_vs_per_token']:.2f}x;"
+          f"macro_tok_s={sp['modes']['macro']['tokens_per_sec']:.0f};"
+          f"parity={sp['token_identical_all_modes']}")
 
     from benchmarks import roofline
     with Timer() as t:

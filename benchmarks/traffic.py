@@ -16,12 +16,20 @@ requests share one HBM slot pool through ``serve.sched``.  Reports:
     ``SharedPagedPools`` by ``kernels.paged_attention``) must emit
     token-identical output to per-request ``generate`` for the same
     prompts/keys, and the paged kernel's gather from the shared HBM pool
-    must match the host-leaf reference.
+    must match the host-leaf reference;
+  * wall-clock serving throughput (``serving_perf``): the macro-step
+    decode loop (one device launch per movement period) vs the per-token
+    paged loop -- tokens/sec (== decode token-steps/sec) and per-
+    scheduler-step p50/p95 latency -- with the four-way bit-parity bar
+    (dense == per-token paged == macro-step == per-request generate).
+    Written to ``BENCH_serving.json`` so the serving perf trajectory is
+    tracked across PRs.
 
-    PYTHONPATH=src python -m benchmarks.traffic [--quick]
+    PYTHONPATH=src python -m benchmarks.traffic [--quick | --smoke]
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Optional
 
 import numpy as np
@@ -197,8 +205,142 @@ def _token_parity(quick: bool) -> Dict:
             "pages_all_released": pools.free_pages == pools.n_logical}
 
 
+def serving_perf(quick: bool = False) -> Dict:
+    """Wall-clock serving throughput: macro-step vs per-token paged decode.
+
+    Each mode serves two identical request waves over one batcher: wave 1
+    warms the jit caches, wave 2 is timed.  ``tokens_per_sec`` counts
+    decode token-steps served per wall second (the throughput the macro
+    loop exists to raise); latency percentiles are per ``step()`` call
+    (one token for the per-token path, one movement period for macro).
+    The parity field pins the tentpole bar: every mode's wave-2 streams
+    bit-identical to per-request ``generate``."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 4 if quick else 8
+    page, max_len, max_active = 4, 64, 4
+    macro_len = 8
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(5, 12))).astype(np.int32)
+               for _ in range(n_req)]
+    budgets = [int(rng.integers(10, 16)) for _ in range(n_req)]
+    temps = [0.0 if i % 2 == 0 else 0.7 for i in range(n_req)]
+    keys = [jax.random.PRNGKey(50 + i) for i in range(n_req)]
+
+    def build(mode):
+        pools = SharedPagedPools.create(192, 64)
+        mgr = TieringManager(192, TierConfig(page_size=page, hbm_pages=64,
+                                             period_steps=macro_len))
+        mon = TrafficMonitor(pools, mgr,
+                             OnlineTuner(192, default_period=macro_len,
+                                         profile_steps=16, trial_steps=8))
+        return ContinuousBatcher(params, cfg, max_active=max_active,
+                                 max_len=max_len, page_size=page,
+                                 monitor=mon, paged=(mode != "dense"),
+                                 macro=(mode == "macro"),
+                                 macro_steps=(macro_len if mode == "macro"
+                                              else None))
+
+    def submit_wave(b, wave):
+        for i in range(n_req):
+            b.submit(Request(rid=wave * n_req + i, prompt=prompts[i],
+                             max_new_tokens=budgets[i], key=keys[i],
+                             temperature=temps[i]))
+
+    def drive(b):
+        tokens, lats = 0, []
+        while b.queue or b.active:
+            t0 = time.perf_counter()
+            out = b.step()
+            lats.append(time.perf_counter() - t0)
+            tokens += len(out)
+        return tokens, lats
+
+    refs = [np.asarray(generate(params, cfg, jnp.asarray(prompts[i])[None],
+                                steps=budgets[i], temperature=temps[i],
+                                key=keys[i]))[0].tolist()
+            for i in range(n_req)]
+
+    modes = ("paged", "macro", "dense")
+    results: Dict[str, Dict] = {}
+    parity: Dict[str, bool] = {}
+    for mode in modes:
+        b = build(mode)
+        submit_wave(b, 0)                    # warm the jit caches
+        drive(b)
+        submit_wave(b, 1)                    # timed wave
+        t0 = time.perf_counter()
+        tokens, lats = drive(b)
+        wall = time.perf_counter() - t0
+        lat_ms = np.asarray(lats) * 1e3
+        results[mode] = {
+            "tokens": tokens,
+            "wall_s": wall,
+            # decode token-steps/sec == tokens/sec: every emitted token
+            # is one request-token-step (the satellite's "steps/sec")
+            "tokens_per_sec": tokens / wall,
+            "sched_steps": len(lats),
+            "latency_ms_p50": float(np.percentile(lat_ms, 50)),
+            "latency_ms_p95": float(np.percentile(lat_ms, 95)),
+        }
+        got = {r.rid: list(r.tokens) for r in b.completed}
+        parity[mode] = all(got.get(n_req + i) == refs[i]
+                           for i in range(n_req))
+
+    out = {
+        "n_requests": n_req,
+        "max_active": max_active,
+        "macro_len": macro_len,
+        "modes": results,
+        "speedup_macro_vs_per_token": (results["macro"]["tokens_per_sec"]
+                                       / results["paged"]["tokens_per_sec"]),
+        "parity_vs_generate": parity,
+        "token_identical_all_modes": all(parity.values()),
+    }
+    save_json("BENCH_serving", out)
+    return out
+
+
+def _print_serving(sp: Dict) -> None:
+    for mode, r in sp["modes"].items():
+        print(f"serving[{mode:>5s}]: {r['tokens_per_sec']:8.1f} tok/s  "
+              f"step p50 {r['latency_ms_p50']:7.2f} ms  "
+              f"p95 {r['latency_ms_p95']:7.2f} ms  "
+              f"({r['tokens']} tokens / {r['sched_steps']} sched steps)")
+    print(f"macro-step speedup vs per-token paged: "
+          f"{sp['speedup_macro_vs_per_token']:.2f}x; "
+          f"token-identical (all modes vs generate): "
+          f"{sp['token_identical_all_modes']}")
+
+
 if __name__ == "__main__":
-    r = run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serving-throughput comparison only (the "
+                         "macro-step acceptance bar)")
+    args = ap.parse_args()
+    if args.smoke:
+        sp = serving_perf(quick=True)
+        _print_serving(sp)
+        assert sp["token_identical_all_modes"], \
+            "macro/paged/dense decode diverged from per-request generate"
+        assert sp["speedup_macro_vs_per_token"] >= 1.3, \
+            "macro-step decode must beat the per-token paged path by " \
+            f">= 1.3x (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+        raise SystemExit(0)
+    r = run(args.quick)
     o = r["online"]
     print(f"traffic: {r['requests']['completed']}/{r['requests']['submitted']}"
           f" requests completed over {r['steps']} steps")
@@ -217,3 +359,4 @@ if __name__ == "__main__":
     print(f"token parity: {tp['token_identical']} over {tp['requests']} "
           f"requests; paged kernel max diff {tp['paged_kernel_max_diff']:.1e};"
           f" pages released: {tp['pages_all_released']}")
+    _print_serving(serving_perf(args.quick))

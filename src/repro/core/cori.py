@@ -265,25 +265,35 @@ class OnlineTuner:
     # -- per-step entry point ------------------------------------------------
     def on_step(self, page_mass: Optional[np.ndarray] = None,
                 cost: float = 0.0,
-                accessed_ids: Optional[np.ndarray] = None) -> int:
-        """Feed one decode step (attention masses or accessed page ids, plus
-        the step's measured cost); returns the period to tier at."""
+                accessed_ids: Optional[np.ndarray] = None,
+                dt: int = 1) -> int:
+        """Feed one observation (attention masses or accessed page ids, plus
+        the measured cost); returns the period to tier at.
+
+        ``dt`` is the number of token-steps the observation spans (the
+        macro length when the serving loop samples once per movement
+        period).  The tuner's clock, reuse gaps, and profile/trial
+        windows all advance by ``dt``, so the derived period stays in
+        the same token-step units it is actuated in -- ``cost`` must
+        then be the total for those ``dt`` steps (window means stay
+        per-step)."""
+        dt = max(1, int(dt))
         if accessed_ids is not None:
-            self.collector.observe(accessed_ids)
+            self.collector.observe(accessed_ids, dt=dt)
         elif page_mass is not None:
             self.collector.observe_mass(page_mass, self.access_threshold,
-                                        relative=self.rel_threshold)
+                                        relative=self.rel_threshold, dt=dt)
         self._win_cost += float(cost)
-        self._win_steps += 1
+        self._win_steps += dt
         self.cost_log.append(float(cost))
-        self.step += 1
+        self.step += dt
         if self.state == self.PROFILE:
             if self._win_steps >= self.profile_steps:
                 self._begin_trials()
         elif self.state == self.TRIAL:
             if self._win_steps > self._cost_window() - self._tail_window():
                 self._tail_cost += float(cost)
-                self._tail_steps += 1
+                self._tail_steps += dt
             if self._win_steps >= self._cost_window():
                 self._finish_trial()
         else:  # HOLD

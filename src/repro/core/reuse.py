@@ -128,22 +128,31 @@ class StreamingReuseCollector:
         self.step = 0
         self._gaps: Deque[Tuple[int, int]] = collections.deque()  # (t, gap)
 
-    def observe(self, accessed_ids: np.ndarray) -> None:
-        """Record one decode step's accessed page ids."""
+    def observe(self, accessed_ids: np.ndarray, dt: int = 1) -> None:
+        """Record one observation of accessed page ids.
+
+        ``dt`` is the number of token-steps this observation covers
+        (1 on the per-token path; the macro length when the serving loop
+        samples accessed bits once per movement period).  The clock
+        advances by ``dt``, so reuse gaps stay denominated in TOKEN
+        steps either way -- the macro path quantises a gap to macro
+        boundaries (the paper's accessed-bit scan has the same
+        period-granularity quantisation), but the unit matches the one
+        the derived period is applied in."""
         ids = np.asarray(accessed_ids, np.int64)
         prev = self.last_access[ids]
         t = self.step
         for g in (t - prev[prev >= 0]).tolist():
             self._gaps.append((t, g))
         self.last_access[ids] = t
-        self.step += 1
+        self.step += max(1, int(dt))
         if self.window is not None:
             horizon = self.step - self.window
             while self._gaps and self._gaps[0][0] < horizon:
                 self._gaps.popleft()
 
     def observe_mass(self, page_mass: np.ndarray, threshold: float = 0.05,
-                     relative: bool = False) -> None:
+                     relative: bool = False, dt: int = 1) -> None:
         """Record a step from raw per-page attention masses (the serving
         monitor's output): mass >= threshold counts as an access.
 
@@ -159,7 +168,7 @@ class StreamingReuseCollector:
         if relative:
             threshold = threshold * float(mass.max(initial=0.0))
             threshold = max(threshold, np.finfo(np.float32).tiny)
-        self.observe(np.nonzero(mass >= threshold)[0])
+        self.observe(np.nonzero(mass >= threshold)[0], dt=dt)
 
     @property
     def num_samples(self) -> int:

@@ -266,6 +266,29 @@ def _sim_scan_batch(period_hists, num_reals, init_fast, *, predictive: bool,
                                                            num_reals)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("predictive", "capacity", "lat_fast",
+                                    "lat_slow", "bw_slow", "bw_penalty",
+                                    "mig_cost", "period_overhead",
+                                    "ema_alpha", "interpret"))
+def _sim_scan_batch_fused(period_hists, num_reals, init_fast, *,
+                          predictive: bool, capacity: int, lat_fast,
+                          lat_slow, bw_slow, bw_penalty, mig_cost,
+                          period_overhead, ema_alpha,
+                          interpret: bool = False):
+    """The Pallas port of ``_sim_scan_batch``: candidates on the kernel
+    grid, the period scan carried in VMEM scratch, placement selection by
+    rank (exact ``lax.top_k`` membership) -- see ``kernels.sim_step``.
+    Bit-identical results; one fused launch per candidate stack."""
+    from repro.kernels.sim_step import sim_scan
+    return sim_scan(period_hists, num_reals, init_fast,
+                    predictive=predictive, capacity=capacity,
+                    lat_fast=lat_fast, lat_slow=lat_slow, bw_slow=bw_slow,
+                    bw_penalty=bw_penalty, mig_cost=mig_cost,
+                    period_overhead=period_overhead, ema_alpha=ema_alpha,
+                    interpret=interpret)
+
+
 def simulate(bins: TraceBins, period_requests: int, scheduler: str = "reactive",
              cfg: SimConfig = SimConfig()) -> SimResult:
     """Simulate one (trace, period, scheduler) combination."""
@@ -365,7 +388,8 @@ _SWEEP_CHUNK_ELEMS = 64 * 1024 * 1024
 
 
 def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
-          cfg: SimConfig = SimConfig()) -> Dict[int, SimResult]:
+          cfg: SimConfig = SimConfig(), impl: str = "jax"
+          ) -> Dict[int, SimResult]:
     """Simulate a set of candidate periods (requests) in one batched pass.
 
     The per-candidate `simulate` loop (kept as `sweep_loop`) re-reads and
@@ -375,7 +399,12 @@ def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
     equal pow2-padded period counts are stacked and driven through a single
     `jax.vmap`-batched scan (`_sim_scan_batch`).  Results match `sweep_loop`
     exactly -- same per-period math, padded periods masked by each
-    candidate's real count."""
+    candidate's real count.
+
+    ``impl`` selects the scan engine: "jax" (the vmapped ``lax.scan``,
+    default), or "pallas"/"interpret" for the fused ``kernels.sim_step``
+    kernel (candidates on the grid, carry in VMEM scratch; bit-identical
+    selection via rank instead of ``lax.top_k``)."""
     if scheduler not in SCHEDULERS:
         raise ValueError(f"scheduler must be one of {SCHEDULERS}")
     ks = sorted({max(1, int(round(int(p) / bins.block))) for p in periods})
@@ -399,7 +428,11 @@ def sweep(bins: TraceBins, periods, scheduler: str = "reactive",
                 [jnp.pad(hists[k][0], ((0, p2 - hists[k][0].shape[0]), (0, 0)))
                  for k in chunk])
             nreals = jnp.asarray([hists[k][1] for k in chunk], jnp.int32)
-            rts, swaps, hits = _sim_scan_batch(
+            scan_fn = (_sim_scan_batch if impl == "jax"
+                       else functools.partial(
+                           _sim_scan_batch_fused,
+                           interpret=(impl == "interpret")))
+            rts, swaps, hits = scan_fn(
                 stack, nreals, init_fast,
                 predictive=(scheduler == "predictive"), capacity=capacity,
                 lat_fast=cfg.lat_fast, lat_slow=cfg.lat_slow,

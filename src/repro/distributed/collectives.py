@@ -16,7 +16,28 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat as _compat  # jax.shard_map on 0.4.x
+
+_compat.install()
+
 __all__ = ["compressed_psum", "compressed_psum_ef"]
+
+# 0.4.x's SPMD partitioner dies on all_gather inside a *partial-manual*
+# shard_map body (Check failed: IsManualSubgroup mismatch in
+# HandleAllGather) -- the exact shape the pod-compressed train step uses
+# (pod manual, data/model auto).  On those versions reduce the int32-
+# widened shards with psum instead: the integer accumulation is
+# bit-identical (the scale is globally agreed beforehand), only the wire
+# format widens from int8 to int32 until the jax pin moves.
+_ALL_GATHER_OK = jax.__version_info__ >= (0, 5)
+
+
+def _int_sum(q, axis_name: str):
+    """Sum the int8 shards over ``axis_name`` in int32, exactly."""
+    if _ALL_GATHER_OK:
+        allq = jax.lax.all_gather(q, axis_name)      # int8 on the wire
+        return jnp.sum(allq.astype(jnp.int32), axis=0)
+    return jax.lax.psum(q.astype(jnp.int32), axis_name)
 
 
 def _quantize_global(x, axis_name: str):
@@ -37,8 +58,7 @@ def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     if n == 1:
         return x
     q, scale = _quantize_global(x.astype(jnp.float32), axis_name)
-    allq = jax.lax.all_gather(q, axis_name)          # [n, ...] int8 on wire
-    total = jnp.sum(allq.astype(jnp.int32), axis=0).astype(jnp.float32)
+    total = _int_sum(q, axis_name).astype(jnp.float32)
     return (total * scale / n).astype(x.dtype)
 
 
@@ -53,6 +73,5 @@ def compressed_psum_ef(x: jnp.ndarray, ef: jnp.ndarray, axis_name: str
     q, scale = _quantize_global(xf, axis_name)
     sent = q.astype(jnp.float32) * scale
     new_ef = (xf - sent).astype(ef.dtype)
-    allq = jax.lax.all_gather(q, axis_name)
-    total = jnp.sum(allq.astype(jnp.int32), axis=0).astype(jnp.float32)
+    total = _int_sum(q, axis_name).astype(jnp.float32)
     return (total * scale / n).astype(x.dtype), new_ef

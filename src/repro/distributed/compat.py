@@ -1,0 +1,75 @@
+"""jax version shim: the post-0.4 ``jax.shard_map`` API on jax 0.4.x.
+
+The repo (and its tests) are written against the stable top-level API --
+``jax.shard_map(..., check_vma=..., axis_names=...)`` and the
+``jax.set_mesh`` context manager -- while CI and this container pin
+jax 0.4.37, where shard_map still lives in ``jax.experimental.shard_map``
+with the older parameter names:
+
+    check_vma=bool      ->  check_rep=bool   (same meaning: verify that
+                            unmapped outputs are replicated)
+    axis_names={...}    ->  auto=frozenset(mesh.axis_names) - axis_names
+                            (new API names the MANUAL axes; old API names
+                            the AUTO complement)
+
+``install()`` publishes the adapters as ``jax.shard_map`` /
+``jax.set_mesh`` when (and only when) the running jax lacks them, so the
+same call sites -- including test subprocesses that import any repro
+module -- run unchanged on either side of the API break.  On jax >= the
+rename, ``install()`` is a no-op and the native symbols win.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "install"]
+
+
+def _shard_map_04x(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                   check_vma=True, axis_names=None, **kw):
+    """``jax.shard_map`` signature, executed via 0.4.x
+    ``jax.experimental.shard_map.shard_map``."""
+    from jax.experimental.shard_map import shard_map as _sm
+    if f is None:                      # used as a decorator factory
+        return functools.partial(
+            _shard_map_04x, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=check_vma,
+            axis_names=axis_names, **kw)
+    auto = frozenset()
+    if axis_names is not None and mesh is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=bool(check_vma), auto=auto)
+
+
+@contextlib.contextmanager
+def _set_mesh_04x(mesh):
+    """``jax.set_mesh`` stand-in: 0.4.x shard_map takes the mesh
+    explicitly, so the context only needs to scope it syntactically."""
+    yield mesh
+
+
+def _axis_size_04x(axis_name):
+    """``jax.lax.axis_size`` stand-in: inside a 0.4.x manual-axes body,
+    ``jax.core.axis_frame(name)`` IS the (static) axis size."""
+    import jax.core as _core
+    return int(_core.axis_frame(axis_name))
+
+
+def install() -> None:
+    """Publish the adapters on the ``jax`` module where missing."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_04x
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh_04x
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size_04x
+
+
+install()
+
+shard_map = jax.shard_map
+set_mesh = jax.set_mesh

@@ -61,16 +61,13 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
                                         lengths, window=window,
                                         softcap=softcap,
                                         return_mass=return_mass)
-    out = _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
-                              window=window, softcap=softcap,
-                              interpret=(impl == "interpret"))
+    # The kernel carries a per-page exp-sum alongside its online-softmax
+    # accumulators and emits the head-normalised page mass as a second
+    # output -- telemetry is fused in-kernel; the reference oracle above is
+    # retained only as the allclose target (tests/test_kernels.py).
+    out, mass = _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
+                                    window=window, softcap=softcap,
+                                    interpret=(impl == "interpret"))
     if not return_mass:
         return out
-    # The online-softmax kernel does not keep normalised per-page weights;
-    # recompute the mass signal with the reference oracle (on the CPU
-    # substrate the serving loop runs impl="reference" anyway; a TPU
-    # deployment would fuse this as a second cheap pass).
-    _, mass = _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
-                                       lengths, window=window,
-                                       softcap=softcap, return_mass=True)
     return out, mass

@@ -28,6 +28,16 @@ The jitted wrapper (``repro.kernels.ops.paged_attention``) clamps those to
 0 -- they are masked by ``lengths`` -- so the index_map never DMAs out of
 bounds.
 
+Besides the context the kernel emits the **per-page attention mass** as a
+second output: f32[B, pages_per_seq], head-normalised (each in-length row
+sums to ~1).  This is the "accessed bits" signal the Cori-tuned tiering
+runtime consumes -- emitting it from the online-softmax accumulators makes
+telemetry free (one extra [H, pages] VMEM scratch, no second pass over the
+KV pages).  Per page the kernel keeps the running exp-sum under the SAME
+max/correction cascade as the context accumulator, so at the flush step
+``mass[pi] = sum_h p_scr[h, pi] / l[h] / H`` equals the softmax
+probability mass the reference oracle assigns to page ``pi``.
+
 q: [B, H, D]; k_pages/v_pages: [P_phys, page, KV, D];
 page_table: int32[B, pages_per_seq]; lengths: int32[B].
 """
@@ -44,9 +54,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, page: int, n_pages: int, scale: float,
-            window: int, softcap: float):
+def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref, mass_ref,
+            m_scr, l_scr, acc_scr, p_scr, *, page: int, n_pages: int,
+            scale: float, window: int, softcap: float):
     b = pl.program_id(0)
     pi = pl.program_id(1)
 
@@ -55,6 +65,7 @@ def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        p_scr[...] = jnp.zeros_like(p_scr)
 
     q = q_ref[0]                                   # [H, D]
     k = k_ref[0]                                   # [page, KV, D]
@@ -92,19 +103,29 @@ def _kernel(page_table, lengths, q_ref, k_ref, v_ref, o_ref,
         pg.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
         preferred_element_type=jnp.float32)        # [kvh, rep, d]
     acc_scr[...] = acc_scr[...] * corr + ctx.reshape(h, d)
+    # per-page exp-sum under the same correction cascade as the context
+    # accumulator: column pi gets this page's sum, prior columns re-scale
+    page_col = (jax.lax.iota(jnp.int32, n_pages) == pi).astype(jnp.float32)
+    p_scr[...] = p_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True) \
+        * page_col[None, :]
     m_scr[...] = m_new
     l_scr[...] = l_new
 
     @pl.when(pi == n_pages - 1)
     def _flush():
-        o_ref[0] = (acc_scr[...]
-                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        l_safe = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+        mass_ref[0] = jnp.sum(p_scr[...] / l_safe, axis=0) / h
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
                     window: int = 0, softcap: float = 0.0,
                     interpret: bool = False):
-    """Decode attention over paged KV.  Returns [B, H, D]."""
+    """Decode attention over paged KV.
+
+    Returns (out [B, H, D], mass f32[B, pages_per_seq]) -- the per-page
+    head-normalised attention mass is emitted from the kernel's own
+    softmax accumulators (no second pass over the pages)."""
     b, h, d = q.shape
     p_phys, page, kvh, _ = k_pages.shape
     n_pages = page_table.shape[1]
@@ -123,16 +144,21 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
             pl.BlockSpec((1, page, kvh, d),
                          lambda bi, pi, pt, ln: (pt[bi, pi], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, d), lambda bi, pi, pt, ln: (bi, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, pi, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, n_pages), lambda bi, pi, pt, ln: (bi, 0)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h, n_pages), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        out_shape=[jax.ShapeDtypeStruct((b, h, d), q.dtype),
+                   jax.ShapeDtypeStruct((b, n_pages), jnp.float32)],
         interpret=interpret,
     )(page_table, lengths, q, k_pages, v_pages)

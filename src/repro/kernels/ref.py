@@ -46,6 +46,12 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
     With ``return_mass`` also returns the per-page attention-probability
     mass f32[B, n], *head-normalised* (each row sums to ~1): the "accessed
     bits" signal the fully-paged serving monitor aggregates across layers.
+
+    The serving loop no longer calls this to compute the mass -- the
+    Pallas kernel emits it from its own online-softmax accumulators
+    (fused telemetry).  This oracle is the allclose target that pins the
+    kernel's fused output (tests/test_kernels.py, parametrized over
+    window / softcap / GQA).
     """
     b, h, d = q.shape
     _, page, kvh, _ = k_pages.shape

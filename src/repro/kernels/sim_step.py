@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: the hybrid-memory simulator's period scan, fused.
+
+``core.sim._sim_scan_batch`` vmaps ``_scan_one`` over a [C, P, num_pages]
+candidate stack -- one ``lax.scan`` whose body does a top-k placement
+decision plus elementwise cost/state updates.  This kernel is the TPU port
+of that inner step: the candidate axis is the outer grid dimension, the
+period axis the inner one, and the scan carry (placement, hotness,
+recency, running totals) lives in VMEM scratch across the period axis --
+the same accumulator idiom as ``paged_attention``.  One launch evaluates
+the whole candidate ladder without leaving the device.
+
+The paper's placement rule needs the top-``capacity`` pages by score.
+``lax.top_k`` does not lower to Pallas, so selection is reformulated as a
+*rank* computation with a [n, n] compare matrix (the TPU-native trick
+``page_hist`` uses for histograms -- VPU compares, no sort):
+
+    rank_i = #{j : score_j > score_i}  +  #{j < i : score_j == score_i}
+    new_fast_i = rank_i < capacity
+
+which selects exactly ``lax.top_k``'s membership set (score descending,
+index ascending on ties), so the kernel is bit-identical to the jax path
+-- all cost arithmetic is the same float32 expressions in the same order.
+
+VMEM bound: the compare matrix is [num_pages, num_pages] f32; footprints
+up to ~1.5k pages fit comfortably.  The batched jax path remains the
+default on larger footprints (``core.sim.sweep(impl=...)`` selects).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(num_reals, hist_ref, init_ref, rt_ref, sw_ref, fh_ref,
+            fast_scr, hot_scr, last_scr, acc_scr, *, capacity: int,
+            predictive: bool, lat_fast: float, lat_slow: float,
+            bw_slow: float, bw_penalty: float, mig_cost: float,
+            period_overhead: float, ema_alpha: float, n_periods: int):
+    c = pl.program_id(0)
+    i = pl.program_id(1)
+    n = hot_scr.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        fast_scr[...] = init_ref[...].astype(jnp.float32)
+        hot_scr[...] = jnp.zeros_like(hot_scr)
+        last_scr[...] = jnp.full_like(last_scr, -1.0)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    counts = hist_ref[0, 0]                       # [n] this period's hist
+    valid = i < num_reals[c]
+    in_fast = fast_scr[...]
+    hotness = hot_scr[...]
+    last_access = last_scr[...]
+
+    # --- scheduler decision at period start (same f32 expressions, same
+    # order, as core.sim._scan_one) ----------------------------------------
+    rank = counts if predictive else hotness
+    recency = (last_access + 1.0) / (jnp.float32(i) + 2.0)
+    score = rank * 1e6 + recency + 0.5 * in_fast
+
+    # top-`capacity` membership via rank (exact lax.top_k tie semantics)
+    beats = (score[None, :] > score[:, None]).astype(jnp.float32)
+    idx = jax.lax.iota(jnp.int32, n)
+    ties = ((score[None, :] == score[:, None])
+            & (idx[None, :] < idx[:, None])).astype(jnp.float32)
+    r = jnp.sum(beats + ties, axis=1)
+    new_fast = (r < capacity).astype(jnp.float32)
+    new_fast = jnp.where(valid, new_fast, in_fast)
+
+    swaps = jnp.sum(new_fast * (1.0 - in_fast))
+
+    # --- service this period's accesses ------------------------------------
+    total = jnp.sum(counts)
+    n_fast = jnp.sum(counts * new_fast)
+    n_slow = total - n_fast
+    latency = n_fast * lat_fast + n_slow * lat_slow
+    bw_extra = jnp.maximum(0.0, n_slow - bw_slow * total) * bw_penalty
+    period_rt = latency + bw_extra + swaps * mig_cost + period_overhead
+    period_rt = jnp.where(valid, period_rt, 0.0)
+    swaps = jnp.where(valid, swaps, 0.0)
+    n_fast = jnp.where(valid, n_fast, 0.0)
+
+    # --- post-period state updates -----------------------------------------
+    hot_scr[...] = jnp.where(valid,
+                             ema_alpha * counts + (1 - ema_alpha) * hotness,
+                             hotness)
+    last_scr[...] = jnp.where(valid & (counts > 0), jnp.float32(i),
+                              last_access)
+    fast_scr[...] = new_fast
+    acc_scr[...] = acc_scr[...] + jnp.stack([period_rt, swaps, n_fast])
+
+    @pl.when(i == n_periods - 1)
+    def _flush():
+        rt_ref[0] = acc_scr[0]
+        sw_ref[0] = acc_scr[1]
+        fh_ref[0] = acc_scr[2]
+
+
+def sim_scan(period_hists, num_reals, init_fast, *, predictive: bool,
+             capacity: int, lat_fast, lat_slow, bw_slow, bw_penalty,
+             mig_cost, period_overhead, ema_alpha,
+             interpret: bool = False):
+    """Fused candidate sweep.  period_hists: f32[C, P, num_pages];
+    num_reals: int32[C]; init_fast: bool[num_pages].
+    Returns (runtime [C], swaps [C], fast_hits [C])."""
+    c, p, n = period_hists.shape
+    kernel = functools.partial(
+        _kernel, capacity=int(capacity), predictive=bool(predictive),
+        lat_fast=float(lat_fast), lat_slow=float(lat_slow),
+        bw_slow=float(bw_slow), bw_penalty=float(bw_penalty),
+        mig_cost=float(mig_cost), period_overhead=float(period_overhead),
+        ema_alpha=float(ema_alpha), n_periods=p)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c, p),
+        in_specs=[
+            pl.BlockSpec((1, 1, n), lambda ci, pi, nr: (ci, pi, 0)),
+            pl.BlockSpec((n,), lambda ci, pi, nr: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda ci, pi, nr: (ci,)),
+            pl.BlockSpec((1,), lambda ci, pi, nr: (ci,)),
+            pl.BlockSpec((1,), lambda ci, pi, nr: (ci,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n,), jnp.float32),    # placement (0/1)
+            pltpu.VMEM((n,), jnp.float32),    # hotness EMA
+            pltpu.VMEM((n,), jnp.float32),    # last access period
+            pltpu.VMEM((3,), jnp.float32),    # (runtime, swaps, hits)
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((c,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(jnp.asarray(num_reals, jnp.int32), period_hists,
+      jnp.asarray(init_fast))

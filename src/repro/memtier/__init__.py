@@ -14,10 +14,12 @@ import numpy as np
 
 from repro.core import cori
 from repro.memtier.tiering import (PagedPools, SharedPagedPools, TierConfig,
-                                   TieringManager, bucket_pages)
+                                   TieringManager, bucket_pages,
+                                   write_pages_batched)
 
 __all__ = ["PagedPools", "SharedPagedPools", "TierConfig", "TieringManager",
-           "bucket_pages", "replay", "online_replay", "cori_tune_period",
+           "bucket_pages", "write_pages_batched",
+           "replay", "online_replay", "cori_tune_period",
            "resident_mask", "interleaved_resident"]
 
 

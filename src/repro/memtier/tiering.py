@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,7 +54,7 @@ from repro.core import cori, reuse
 from repro.kernels import ops
 
 __all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools",
-           "bucket_pages"]
+           "bucket_pages", "write_pages_batched"]
 
 
 def bucket_pages(n_pages: int, cap: Optional[int] = None) -> int:
@@ -326,11 +327,11 @@ class SharedPagedPools:
                 kv["v_hbm"][i] = _migrate_stacked(kv["v_hbm"][i],
                                                   kv["v_host"][i], sl, lg)
 
-    def ensure_resident(self, gids: np.ndarray) -> int:
-        """Demand-fetch: make every page in `gids` HBM-resident (free slots
-        first, then evict the least-recently-ensured resident outside
-        `gids`).  Returns the number of pages fetched -- the caller charges
-        them as misses.  Raises if `gids` alone exceed the slot pool."""
+    def _place(self, gids: np.ndarray) -> Tuple[List[int], np.ndarray]:
+        """Slot bookkeeping shared by ``ensure_resident`` and
+        ``assign_slots``: give every non-resident page in ``gids`` an HBM
+        slot (free slots first, then evict the least-recently-ensured
+        resident outside ``gids``).  Returns (slots, missing)."""
         gids = np.asarray(gids, np.int64)
         if gids.size > self.hbm_pages:
             raise ValueError(f"{gids.size} pages cannot fit the "
@@ -353,9 +354,68 @@ class SharedPagedPools:
             self.slot_of[gid] = slot
             self.page_of_slot[slot] = gid
             slots.append(slot)
-        self.migrate_slots(slots, missing)
         self._slot_tick[self.slot_of[gids]] = self._tick
+        return slots, missing
+
+    def ensure_resident(self, gids: np.ndarray) -> int:
+        """Demand-fetch: make every page in `gids` HBM-resident (free slots
+        first, then evict the least-recently-ensured resident outside
+        `gids`).  Returns the number of pages fetched -- the caller charges
+        them as misses.  Raises if `gids` alone exceed the slot pool."""
+        slots, missing = self._place(gids)
+        self.migrate_slots(slots, missing)
         return int(missing.size)
+
+    def assign_slots(self, gids: np.ndarray) -> np.ndarray:
+        """``ensure_resident`` without the host->HBM byte copy: the caller
+        is about to overwrite the pages' content on BOTH tiers in one
+        device scatter (``write_pages_batched``), so migrating the stale
+        bytes first would be wasted PCIe traffic.  Returns the HBM slot of
+        every page in ``gids`` (all resident on return)."""
+        self._place(gids)
+        return self.slot_of[np.asarray(gids, np.int64)].copy()
+
+
+PAGE_DROP = np.int32(2 ** 30)      # out-of-range scatter index => dropped
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_pages_batched(kv, ks_new, vs_new, gids, slots):
+    """On-device prefill scatter: write a packed-prefill step's KV for
+    EVERY attention layer and EVERY joiner straight into the layered page
+    pools, host and HBM tiers together, in one jitted gather/scatter.
+
+    kv:             the layered pool pytree (``SharedPagedPools.kv_view``;
+                    donated -- XLA updates the pool buffers in place).
+    ks_new/vs_new:  one leaf per ``attn_slot_meta`` entry, each
+                    [R, J, smax, KV, D]: the batched-prefill cache rows of
+                    the J joiners (right-padded to smax).
+    gids / slots:   int32[J, n_max] logical page ids / HBM slot ids per
+                    joiner page; entries >= the pool size (``PAGE_DROP``)
+                    are dropped -- the ragged padding of short prompts.
+
+    Replaces the host-side per-request x per-layer x per-tensor ``.at``
+    loop: J*L*2 separate dispatches collapse into one launch, and the
+    prefill bytes never take the host detour (on TPU they go HBM->HBM).
+    """
+    j, n_max = gids.shape
+    gidf = gids.reshape(-1)
+    slotf = slots.reshape(-1)
+    out = {k: list(v) for k, v in kv.items()}
+    for li in range(len(ks_new)):
+        ps = kv["k_host"][li].shape[2]
+        for name, new in (("k", ks_new[li]), ("v", vs_new[li])):
+            r, _, smax, kvh, d = new.shape
+            pad = n_max * ps - smax
+            if pad > 0:
+                new = jnp.pad(new, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+            pages = new[:, :, : n_max * ps].reshape(r, j * n_max, ps, kvh, d)
+            out[f"{name}_host"][li] = out[f"{name}_host"][li].at[
+                :, gidf].set(pages, mode="drop")
+            out[f"{name}_hbm"][li] = out[f"{name}_hbm"][li].at[
+                :, slotf].set(pages, mode="drop")
+    return out
 
 
 class TieringManager:
@@ -398,19 +458,29 @@ class TieringManager:
         return True
 
     # -- monitor -----------------------------------------------------------
-    def on_step(self, page_mass: np.ndarray, resident: np.ndarray):
+    def on_step(self, page_mass: np.ndarray, resident: np.ndarray,
+                weight: float = 1.0):
         """page_mass: f32[n_logical] attention mass this decode step;
-        resident: bool[n_logical]."""
+        resident: bool[n_logical].
+
+        ``weight`` is the number of token-steps this mass sample spans
+        (1 on the per-token path; the macro length when accessed bits are
+        sampled once per movement period).  Hotness counts and hit/miss
+        service costs scale by it, so a page touched every token accrues
+        the same modeled cost whether the host observed it once or
+        ``weight`` times -- without this, a longer period would look
+        cheaper purely because it was sampled less often."""
         accessed = page_mass >= self.cfg.access_threshold
         ids = np.nonzero(accessed)[0].astype(np.int32)
         self.access_log.append(ids)
-        self.counts_since_tier[accessed] += 1.0
+        self.counts_since_tier[accessed] += weight
         self.last_access[accessed] = self.step
         hits = accessed & resident
         misses = accessed & ~resident
-        self.hits += int(hits.sum())
-        self.misses += int(misses.sum())
-        self.modeled_time += hits.sum() * 1.0 + misses.sum() * self.cfg.miss_penalty
+        self.hits += int(weight * hits.sum())
+        self.misses += int(weight * misses.sum())
+        self.modeled_time += weight * (hits.sum() * 1.0
+                                       + misses.sum() * self.cfg.miss_penalty)
         self.step += 1
         self._since_tier += 1
 
@@ -464,8 +534,16 @@ class TieringManager:
         return bring[:n_bring], evict[:n_evict]
 
     def maybe_tier(self, pools: PagedPools,
-                   active: Optional[np.ndarray] = None) -> PagedPools:
-        if self.step == 0 or not self._tier_due():
+                   active: Optional[np.ndarray] = None,
+                   force: bool = False) -> PagedPools:
+        """``force=True`` tiers regardless of the step cadence -- the
+        macro-step serving loop wakes the host exactly once per movement
+        period, so every wakeup IS a tiering boundary."""
+        if self.step == 0:
+            return pools
+        if force:
+            self._since_tier = 0
+        elif not self._tier_due():
             return pools
         cfg = self.cfg
         resident = pools.slot_of >= 0

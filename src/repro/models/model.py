@@ -728,6 +728,16 @@ def decode_step_paged(params, cfg: ModelConfig, kv, tables, gid_tables,
     if not paged_supported(cfg):
         raise ValueError(f"{cfg.name}: fully-paged decode needs all-"
                          "attention (non-MLA) layers and prefix_len == 0")
+    return _paged_decode_core(params, cfg, kv, tables, gid_tables, tokens,
+                              cur_pos, page_size=page_size, impl=impl,
+                              cond=cond, mesh=mesh, shard=shard)
+
+
+def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
+                       tokens, cur_pos, *, page_size: int, impl: str,
+                       cond=None, mesh=None, shard=_IDENT):
+    """The traced body shared by ``decode_step_paged`` (one launch per
+    token) and ``decode_macro_step`` (one launch per movement period)."""
     b = tokens.shape[0]
     n_row_pages = tables.shape[1]
     active = cur_pos >= 0
@@ -845,6 +855,105 @@ def decode_step_paged(params, cfg: ModelConfig, kv, tables, gid_tables,
     page_mass = mass_sum / max(1, n_layers)
     page_mass = jnp.where(active[:, None], page_mass, 0.0)
     return logits, new_kv, page_mass
+
+
+def _sample_row(logits_row, key, temperature):
+    """Per-row sampling lane (vmapped): bit-identical to the host path's
+    ``engine._sample(logits[row:row+1, 0], key, temperature)``.  The
+    categorical draw consumes the same key stream as the per-request call
+    (same shape [1, V], so the threefry bits coincide); greedy rows take
+    the argmax and discard the draw."""
+    greedy = jnp.argmax(logits_row, axis=-1)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    drawn = jax.random.categorical(key, logits_row / safe_t, axis=-1)
+    return jnp.where(temperature > 0.0, drawn, greedy)        # [1]
+
+
+def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
+                      tokens, cur_pos, keys, iters, emitted, max_new,
+                      eos_ids, temps, *, n_steps: int, page_size: int,
+                      impl: str = "reference", cond=None, mesh=None,
+                      shard=_IDENT):
+    """Up to ``n_steps`` fully-paged decode steps in ONE device launch.
+
+    A ``jax.lax.scan`` drives ``_paged_decode_core`` with on-device
+    sampling (the exact per-request ``fold_in(key, i)`` schedule of
+    ``engine.generate``), on-device mass accumulation, and EOS / length
+    masking, so the host only uploads page tables once per movement
+    period and downloads ``(tokens, summed mass, finished flags)`` once
+    -- the serving hot loop never synchronises at token granularity.
+
+    Per-row serving state (all int32[B] / f32[B] unless noted):
+      keys     uint32[B, 2] raw PRNG keys (``req._key``)
+      iters    decode iterations done (``req._i``: the fold_in schedule)
+      emitted  tokens emitted so far incl. the prefill sample
+      max_new  the request's token budget (stop when ``emitted`` reaches it)
+      eos_ids  per-request EOS token (-1 = none)
+      temps    sampling temperature
+
+    A row is *alive* while ``cur_pos >= 0`` and no stop condition has
+    fired; dead rows freeze completely -- no KV writes (their ``cur`` is
+    -1 so the core masks them), no key folds, no mass, no emission -- so
+    the emitted stream is bit-identical to the per-token path, which
+    retires a request on the host before the next launch.
+
+    Returns ``(tokens_out int32[n_steps, B] (-1 = row not alive), new_kv,
+    state)`` with ``state = {mass_sum f32[B, n_row_pages], alive_steps
+    int32[B], pos, keys, iters, emitted, stopped bool[B]}`` -- everything
+    the scheduler needs to retire finished requests and feed the monitor
+    one merged mass per period.
+    """
+    if not paged_supported(cfg):
+        raise ValueError(f"{cfg.name}: fully-paged decode needs all-"
+                         "attention (non-MLA) layers and prefix_len == 0")
+    b = tokens.shape[0]
+    n_row_pages = tables.shape[1]
+
+    def run(carry):
+        kv, tok, pos, ks, it, em, stopped, mass_sum, alive_steps = carry
+        alive = (pos >= 0) & ~stopped
+        cur = jnp.where(alive, pos, -1)
+        logits, kv, mass = _paged_decode_core(
+            params, cfg, kv, tables, gid_tables, tok, cur,
+            page_size=page_size, impl=impl, cond=cond, mesh=mesh,
+            shard=shard)
+        mass_sum = mass_sum + mass            # core zeroes dead rows
+        alive_steps = alive_steps + alive.astype(jnp.int32)
+        ks2 = jax.vmap(jax.random.fold_in)(ks, it)
+        new_tok = jax.vmap(_sample_row)(logits, ks2, temps)   # [B, 1]
+        ks = jnp.where(alive[:, None], ks2, ks)
+        it = jnp.where(alive, it + 1, it)
+        em = jnp.where(alive, em + 1, em)
+        tok = jnp.where(alive[:, None], new_tok.astype(tok.dtype), tok)
+        stop_now = alive & ((em >= max_new)
+                            | ((eos_ids >= 0) & (tok[:, 0] == eos_ids)))
+        stopped = stopped | stop_now
+        pos = jnp.where(alive, pos + 1, pos)
+        out = jnp.where(alive, tok[:, 0], -1)
+        return (kv, tok, pos, ks, it, em, stopped, mass_sum,
+                alive_steps), out
+
+    def body(carry, _):
+        # all rows done: skip the model entirely (lax.cond executes one
+        # branch at runtime, so a macro longer than the remaining work
+        # costs nothing past the last live token)
+        kv, tok, pos, ks, it, em, stopped, *_ = carry
+        any_alive = jnp.any((pos >= 0) & ~stopped)
+        return jax.lax.cond(
+            any_alive, run,
+            lambda c: (c, jnp.full((b,), -1, jnp.int32)), carry)
+
+    init = (kv, tokens, cur_pos, keys, jnp.asarray(iters, jnp.int32),
+            jnp.asarray(emitted, jnp.int32),
+            jnp.zeros((b,), bool),
+            jnp.zeros((b, n_row_pages), jnp.float32),
+            jnp.zeros((b,), jnp.int32))
+    (kv, tok, pos, ks, it, em, stopped, mass_sum,
+     alive_steps), toks_out = jax.lax.scan(body, init, None, length=n_steps)
+    state = {"mass_sum": mass_sum, "alive_steps": alive_steps, "pos": pos,
+             "keys": ks, "iters": it, "emitted": em, "stopped": stopped,
+             "last_tok": tok}
+    return toks_out, kv, state
 
 
 def init_specs_only(cfg: ModelConfig):

@@ -10,8 +10,11 @@ sequence that ``repro.memtier`` consumes.
 
 The multi-request scheduler (``repro.serve.sched``) only uses
 ``make_monitor`` on its dense fallback path: in fully-paged mode the
-masses come from every attention layer of ``model.decode_step_paged``
-itself, so no separate monitor recompute runs there.
+masses originate inside ``kernels.paged_attention`` itself (a second
+kernel output fused with the online-softmax accumulators), aggregated
+across every attention layer by ``model.decode_step_paged`` /
+``decode_macro_step`` -- no separate monitor recompute runs there, and
+in macro-step mode the signal reaches the host once per movement period.
 """
 from __future__ import annotations
 

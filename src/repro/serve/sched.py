@@ -60,8 +60,9 @@ from repro.core import cori
 from repro.core.traffic import RequestSpec
 from repro.kernels import ops
 from repro.memtier import workload as W
-from repro.memtier.tiering import (SharedPagedPools, TieringManager,
-                                   bucket_pages)
+from repro.memtier.tiering import (PAGE_DROP, SharedPagedPools,
+                                   TieringManager, bucket_pages,
+                                   write_pages_batched)
 from repro.models import model as mdl
 from repro.serve import engine as E
 
@@ -100,7 +101,9 @@ class TrafficMonitor:
         return mass
 
     def on_step(self, global_mass: np.ndarray,
-                n_active: Optional[int] = None) -> int:
+                n_active: Optional[float] = None, *,
+                n_tokens: Optional[int] = None,
+                force_tier: bool = False, fetched: int = 0) -> int:
         """Feed one scheduler step's merged masses: accounting, periodic
         tiering over the shared pool, and the closed tuning loop.  Returns
         the tiering period now in force.
@@ -110,17 +113,51 @@ class TrafficMonitor:
         flight, so a burst of arrivals (or a drain of retirements) looks
         exactly like workload drift and makes the tuner churn through
         re-profiles on a perfectly stable mix; per-request cost is the
-        load-invariant serving metric the drift detector should watch."""
+        load-invariant serving metric the drift detector should watch.
+        ``n_tokens`` declares how many token-steps this feed spans (the
+        macro length): the tuner's clock and reuse gaps advance by it and
+        the manager's service-cost accounting scales by it, keeping the
+        derived period in the token-step units it is actuated in and the
+        per-token cost comparable across period lengths.  ``fetched``
+        demand-fetch page misses are charged INSIDE the cost window (the
+        macro path prefetches its horizon up front -- those misses are
+        the price of the current period and must reach the tuner).
+        ``force_tier`` tiers regardless of the step cadence."""
         mgr = self.manager
         before = mgr.modeled_time
-        mgr.on_step(global_mass, self.pools.resident_mask)
-        mgr.maybe_tier(self.pools, active=self.pools.allocated_mask)
+        if fetched:
+            mgr.misses += fetched
+            mgr.modeled_time += fetched * mgr.cfg.miss_penalty
+        mgr.on_step(global_mass, self.pools.resident_mask,
+                    weight=float(n_tokens or 1))
+        mgr.maybe_tier(self.pools, active=self.pools.allocated_mask,
+                       force=force_tier)
         if self.tuner is not None:
             cost = mgr.modeled_time - before
             if n_active is not None:
                 cost /= max(1, n_active)
-            mgr.set_period(self.tuner.on_step(global_mass, cost=cost))
+            mgr.set_period(self.tuner.on_step(global_mass, cost=cost,
+                                              dt=n_tokens or 1))
         return mgr.period
+
+    def on_macro_step(self, global_mass: np.ndarray,
+                      n_active: Optional[float] = None,
+                      n_tokens: int = 1, fetched: int = 0) -> int:
+        """Feed one *macro step* (one movement period) of merged masses.
+
+        The macro-step serving loop wakes the host exactly once per
+        period, so this is one accounting step, a FORCED tier (every
+        wakeup is a tiering boundary -- the period knob now controls the
+        macro length itself, not a sub-cadence), and one tuner update
+        spanning ``n_tokens`` token-steps: the tuner's reuse gaps and
+        trial windows keep counting TOKENS (quantised to macro
+        boundaries), so the period it derives means the same thing it
+        does on the per-token path.  ``n_active`` is the mean number of
+        in-flight requests over the macro (per-request cost
+        normalisation, as on_step); ``fetched`` is the macro's up-front
+        demand-fetch count, charged inside the tuner's cost window."""
+        return self.on_step(global_mass, n_active, n_tokens=n_tokens,
+                            force_tier=True, fetched=fetched)
 
     def release(self, gids: np.ndarray) -> None:
         """Retire a request's pages everywhere: pool slots freed, manager
@@ -174,7 +211,7 @@ class ContinuousBatcher:
     identical to running ``generate`` alone with the same prompt/key --
     the property the traffic benchmark pins down.
 
-    Two decode data paths:
+    Decode data paths:
 
     * **Fully paged** (``paged=True``, the default whenever
       ``model.paged_supported(cfg)`` and a monitor is attached): the
@@ -185,11 +222,22 @@ class ContinuousBatcher:
       There is no dense per-row ``max_len`` cache at all; peak cache
       memory is the sum of the in-flight bucket-rounded footprints.  The
       per-page masses feeding the tuner come from ALL attention layers
-      of the decode step itself (head-normalised, layer-averaged) -- the
-      true aggregate traffic, not a one-layer sample.  Before each step,
+      of the decode step itself (head-normalised, layer-averaged,
+      emitted by the kernel's own softmax accumulators) -- the true
+      aggregate traffic, not a one-layer sample.  Before each step,
       every page the attention can touch is demand-fetched into HBM
       (charged as misses); admission is gated so the in-flight exact
       footprint fits the HBM slot pool.
+
+      By default the paged path runs **macro-step decode** (``macro=True``):
+      one device launch per movement period (``model.decode_macro_step``
+      -- on-device sampling, EOS/length masking, mass accumulation), so
+      the host only intervenes at tiering boundaries: tables upload once
+      per macro, ``(tokens, summed mass, finished flags)`` download once,
+      and the monitor merge collapses to one call per period.
+      ``macro=False`` keeps the per-token paged loop (the measured
+      baseline); ``macro_steps`` pins a fixed macro length instead of
+      tracking the manager's live Cori period.
 
     * **Dense** (``paged=False``; the fallback for MLA / recurrent /
       prefix architectures): ``max_active`` rows share one packed cache
@@ -204,7 +252,9 @@ class ContinuousBatcher:
                  monitor: Optional[TrafficMonitor] = None,
                  mirror_pages: bool = False,
                  paged: Optional[bool] = None,
-                 paged_impl: str = "reference"):
+                 paged_impl: str = "reference",
+                 macro: Optional[bool] = None,
+                 macro_steps: Optional[int] = None):
         self.params, self.cfg = params, cfg
         self.page_size = page_size
         self.max_len = -(-max_len // page_size) * page_size
@@ -217,11 +267,28 @@ class ContinuousBatcher:
         if self.paged and not can_page:
             raise ValueError("fully-paged decode needs a TrafficMonitor and "
                              f"an all-attention config ({cfg.name})")
+        # macro-step decode: the default hot loop whenever fully paged --
+        # the host wakes once per movement period (``macro_steps`` pins a
+        # fixed macro length; None tracks the manager's live Cori period).
+        # ``macro=False`` keeps the per-token paged loop (the benchmark
+        # baseline the macro path is measured against).
+        self.macro = self.paged if macro is None else bool(macro)
+        if self.macro and not self.paged:
+            raise ValueError("macro-step decode runs on the fully-paged "
+                             "path only")
+        self.macro_steps = macro_steps
         # the write-through mirror needs the LEGACY single-layer arrays;
         # a layered-only pool is physical but has no k_host/k_hbm pair
         self.mirror_pages = (not self.paged) and mirror_pages \
             and monitor is not None and monitor.pools.k_host is not None
         self._batched_prefill = mdl.batched_prefill_supported(cfg)
+        if self._batched_prefill:
+            # admission prefills were dispatched eagerly (op-by-op) -- on
+            # the serving path that dwarfed the decode itself.  Jit it;
+            # prompt lengths are pow2-bucketed in _prefill so the compile
+            # cache is bounded (causal padding cannot change valid rows)
+            self._prefill_fn = jax.jit(functools.partial(
+                mdl.prefill_batched, params, cfg))
 
         self.tok = jnp.zeros((max_active, 1), jnp.int32)
         self.pos = jnp.zeros((max_active,), jnp.int32)
@@ -248,6 +315,10 @@ class ContinuousBatcher:
             self._paged_fn = jax.jit(functools.partial(
                 mdl.decode_step_paged, params, cfg,
                 page_size=page_size, impl=paged_impl), donate_argnums=(0,))
+            self._paged_impl = paged_impl
+            # one compiled macro per scan length (bounded: lengths are the
+            # tuner's period ladder, pow2-capped by the remaining work)
+            self._macro_fns: Dict[int, Callable] = {}
         else:
             # prefill produces float32 caches on this substrate; the packed
             # cache must match or row writes would silently downcast
@@ -324,15 +395,27 @@ class ContinuousBatcher:
         rows/pages, and sample each first token."""
         plens = [len(r.prompt) for r in batch]
         if self._batched_prefill:
-            smax = max(plens)
-            toks = np.zeros((len(batch), smax), np.int32)
+            # pow2-bucket BOTH packed dims -- width and joiner count --
+            # so the jitted prefill (and the downstream page scatter)
+            # compiles per shape class, not per admission.  Right-padding
+            # is inert under causal attention and dummy joiner rows are
+            # simply never read, so valid rows are bit-identical.
+            smax = bucket_pages(max(plens))
+            jp = bucket_pages(len(batch))
+            toks = np.zeros((jp, smax), np.int32)
+            plens_p = np.ones((jp,), np.int32)
             for i, r in enumerate(batch):
                 toks[i, : plens[i]] = r.prompt
-            logits_b, cache_b = mdl.prefill_batched(
-                self.params, self.cfg, jnp.asarray(toks),
-                jnp.asarray(plens, jnp.int32))
+                plens_p[i] = plens[i]
+            logits_b, cache_b = self._prefill_fn(
+                jnp.asarray(toks), jnp.asarray(plens_p))
         else:               # recurrent state: one request at a time
             logits_b, cache_b = None, None
+
+        if self.paged and self._batched_prefill:
+            # one on-device gather/scatter writes EVERY joiner's KV for
+            # EVERY layer straight into the pool slots
+            self._write_prefill_pages_batched(cache_b, batch, plens)
 
         emitted: List[Tuple[int, int]] = []
         for bi, req in enumerate(batch):
@@ -340,7 +423,7 @@ class ContinuousBatcher:
             if self._batched_prefill:
                 logits = logits_b[bi: bi + 1]
                 if self.paged:
-                    self._write_prefill_pages(cache_b, bi, req, plen)
+                    pass                 # pages already written (batched)
                 else:
                     one = mdl.row_cache_from_batched(cache_b, self.cfg, bi,
                                                      plen, self.max_len)
@@ -370,32 +453,41 @@ class ContinuousBatcher:
                 self._retire(req)
         return emitted
 
-    def _write_prefill_pages(self, cache_b, bi: int, req: Request,
-                             plen: int) -> None:
-        """Scatter one joiner's prefilled KV (every attention layer) into
-        its pages of the shared pool's host leaves, then place them in HBM
-        (initial placement, not charged as misses)."""
+    def _write_prefill_pages_batched(self, cache_b, batch: List[Request],
+                                     plens: List[int]) -> None:
+        """Scatter a whole admission's prefilled KV (every joiner, every
+        attention layer, host + HBM tiers) into the shared pool in ONE
+        jitted gather/scatter (``memtier.write_pages_batched``).  Slots
+        are assigned bookkeeping-only first (initial placement, not
+        charged as misses) since the scatter overwrites both tiers --
+        the prefill bytes never take the host detour."""
         pools = self.monitor.pools
         ps = self.page_size
-        n = -(-plen // ps)
-        gids = jnp.asarray(req.gids[:n], jnp.int32)
-        kv = pools.kv_view()
-        for li, (si, j, repeats, _, _) in enumerate(
-                mdl.attn_slot_meta(self.cfg)):
-            e = cache_b["segments"][si][j]
-            for name in ("k", "v"):
-                a = e[name][:, bi]                      # [R, smax, KV, D]
-                pad = n * ps - a.shape[1]
-                if pad > 0:
-                    a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                pages = a[:, : n * ps].reshape(
-                    repeats, n, ps, a.shape[2], a.shape[3])
-                key = f"{name}_host"
-                kv[key][li] = kv[key][li].at[:, gids].set(pages)
-        pools.set_kv(kv)
-        pools.ensure_resident(req.gids[:n])
-        self._gid_tables[req.row, : req.n_alloc] = req.gids
-        self._gid_tables[req.row, req.n_alloc:] = -1
+        ns = [-(-p // ps) for p in plens]
+        # both scatter dims pow2-bucketed (matching the prefill batch):
+        # padded joiner rows / tail pages carry PAGE_DROP and vanish
+        jp = cache_b["segments"][0][0]["pos"].shape[1]
+        n_max = bucket_pages(max(ns))
+        gids_m = np.full((jp, n_max), PAGE_DROP, np.int32)
+        slots_m = np.full((jp, n_max), PAGE_DROP, np.int32)
+        for i, (req, n) in enumerate(zip(batch, ns)):
+            gids_m[i, :n] = req.gids[:n]
+        flat = np.concatenate([req.gids[:n]
+                               for req, n in zip(batch, ns)])
+        slots_flat = pools.assign_slots(flat)
+        o = 0
+        for i, n in enumerate(ns):
+            slots_m[i, :n] = slots_flat[o: o + n]
+            o += n
+        meta = mdl.attn_slot_meta(self.cfg)
+        ks = [cache_b["segments"][si][j]["k"] for (si, j, *_) in meta]
+        vs = [cache_b["segments"][si][j]["v"] for (si, j, *_) in meta]
+        pools.set_kv(write_pages_batched(
+            pools.kv_view(), ks, vs, jnp.asarray(gids_m),
+            jnp.asarray(slots_m)))
+        for req in batch:
+            self._gid_tables[req.row, : req.n_alloc] = req.gids
+            self._gid_tables[req.row, req.n_alloc:] = -1
 
     # -- the per-step scheduler loop -----------------------------------------
     def step(self) -> List[Tuple[int, int]]:
@@ -408,7 +500,8 @@ class ContinuousBatcher:
         if not self.active:
             return emitted
         if self.paged:
-            emitted += self._step_paged()
+            emitted += (self._step_paged_macro() if self.macro
+                        else self._step_paged())
         else:
             emitted += self._step_dense()
         return emitted
@@ -496,6 +589,121 @@ class ContinuousBatcher:
                         and req.tokens[-1] == req.eos_id)):
                 self._retire(req)
         self.tok = new_tok
+        return emitted
+
+    def _macro_fn(self, n_steps: int):
+        fn = self._macro_fns.get(n_steps)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                mdl.decode_macro_step, self.params, self.cfg,
+                page_size=self.page_size, impl=self._paged_impl,
+                n_steps=n_steps), donate_argnums=(0,))
+            self._macro_fns[n_steps] = fn
+        return fn
+
+    def _step_paged_macro(self) -> List[Tuple[int, int]]:
+        """Macro-step decode: ONE device launch runs up to a movement
+        period's worth of tokens for the whole request set
+        (``model.decode_macro_step``), with on-device sampling, mass
+        accumulation and EOS/length masking.  The host uploads page
+        tables once per macro step and downloads (tokens, summed mass,
+        finished flags) once -- between tiering boundaries the loop is
+        device-resident, and ``TrafficMonitor.merge`` collapses to one
+        call per movement period."""
+        pools = self.monitor.pools
+        mgr = self.monitor.manager
+        pos_np = np.asarray(self.pos)
+        rows = list(self.active.items())
+
+        period = self.macro_steps or mgr.period
+        max_rem = max(req.max_new_tokens - len(req.tokens)
+                      for _, req in rows)
+        # The scan length is pow2-bucketed on BOTH sides -- the pow2
+        # floor of the live period (a non-pow2 period quantises to
+        # slightly shorter macros rather than minting a compile per
+        # ladder value: the tuner walks arbitrary DR multiples, and each
+        # distinct n_steps is a full-model XLA compile) and the pow2
+        # ceiling of the remaining work (rows that finish early freeze,
+        # and whole overshoot steps short-circuit on device).  The jit
+        # cache is therefore log-bounded.
+        n_steps = max(1, min(1 << max(0, int(period).bit_length() - 1),
+                             bucket_pages(max_rem)))
+
+        # every page the macro's attention can touch (through each row's
+        # horizon, incl. the write pages) must be HBM-resident up front:
+        # the device never calls home mid-macro.  Re-fetches after
+        # eviction are on-demand host reads, charged as misses inside
+        # the monitor feed below so the tuner's cost window sees them
+        # (they are the price of the current period).
+        need: List[np.ndarray] = []
+        for row, req in rows:
+            horizon = min(n_steps, req.max_new_tokens - len(req.tokens))
+            n = -(-(int(pos_np[row]) + horizon) // self.page_size)
+            need.append(req.gids[:n])
+        fetched = pools.ensure_resident(np.concatenate(need))
+
+        # page tables upload once per macro step: tiering only runs at
+        # macro boundaries, so no page can re-slot mid-macro
+        tables = np.full((self.max_active, self.n_row_pages), -1, np.int32)
+        cur = np.full((self.max_active,), -1, np.int32)
+        keys = np.zeros((self.max_active, 2), np.uint32)
+        iters = np.zeros((self.max_active,), np.int32)
+        emitted_ct = np.zeros((self.max_active,), np.int32)
+        max_new = np.zeros((self.max_active,), np.int32)
+        eos = np.full((self.max_active,), -1, np.int32)
+        temps = np.zeros((self.max_active,), np.float32)
+        for row, req in rows:
+            tables[row, : req.n_alloc] = pools.table(req.gids)
+            cur[row] = pos_np[row]
+            keys[row] = np.asarray(req._key, np.uint32)
+            iters[row] = req._i
+            emitted_ct[row] = len(req.tokens)
+            max_new[row] = req.max_new_tokens
+            eos[row] = -1 if req.eos_id is None else req.eos_id
+            temps[row] = req.temperature
+
+        toks, kv, st = self._macro_fn(n_steps)(
+            pools.kv_view(), jnp.asarray(tables),
+            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
+            jnp.asarray(keys), jnp.asarray(iters), jnp.asarray(emitted_ct),
+            jnp.asarray(max_new), jnp.asarray(eos), jnp.asarray(temps))
+        pools.set_kv(kv)
+
+        toks_np = np.asarray(toks)
+        mass_sum = np.asarray(st["mass_sum"])
+        alive_steps = np.asarray(st["alive_steps"])
+        stopped = np.asarray(st["stopped"])
+        iters_out = np.asarray(st["iters"])
+
+        # ONE merge + monitor feed per movement period (mean mass over
+        # the steps each row actually ran, so the per-step scale the
+        # access threshold expects is preserved).  dt = the macro's span
+        # in token-steps; the mean in-flight count normalises cost per
+        # request as on the per-token path.
+        merged = self.monitor.merge(
+            [(r.gids[: r.n_pages],
+              mass_sum[r.row, : r.n_pages]
+              / max(1, int(alive_steps[r.row])))
+             for _, r in rows])
+        dt = max(1, int(alive_steps.max()))
+        self.monitor.on_macro_step(
+            merged, n_active=float(alive_steps.sum()) / dt, n_tokens=dt,
+            fetched=fetched)
+
+        self.pos = st["pos"]
+        self.tok = st["last_tok"]
+        emitted: List[Tuple[int, int]] = []
+        for t in range(toks_np.shape[0]):
+            for row, req in rows:
+                tk = int(toks_np[t, row])
+                if tk >= 0:
+                    req.tokens.append(tk)
+                    emitted.append((req.rid, tk))
+        for row, req in rows:
+            req._key = st["keys"][row]
+            req._i = int(iters_out[row])
+            if stopped[row]:
+                self._retire(req)
         return emitted
 
     def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:

@@ -15,7 +15,10 @@ import repro.configs as C
 
 def _run(code: str, devices: int = 8) -> str:
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
-           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           # force the CPU backend: containers with libtpu baked in would
+           # otherwise spend minutes per subprocess probing TPU metadata
+           "JAX_PLATFORMS": "cpu"}
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"

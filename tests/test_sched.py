@@ -586,6 +586,148 @@ def test_bucketed_retire_readmit_recycles_without_leak(seed):
         assert pools.allocated_pages == 0
 
 
+def test_macro_step_token_parity_with_per_token_paged():
+    """Macro-step decode (one device launch per movement period, on-device
+    sampling/EOS/length masking) emits bit-identical streams to the
+    per-token paged loop AND per-request generate -- across staggered
+    admission, temperature sampling and the window-ring prompt case."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (10, 6, 9)]          # 10 % window(8) == 2: ring case
+
+    def run(macro):
+        b = ContinuousBatcher(params, cfg, max_active=2, max_len=32,
+                              page_size=4,
+                              monitor=_tiny_serving_stack(cfg, params),
+                              macro=macro)
+        assert b.paged and b.macro == macro
+        for i, p in enumerate(prompts[:2]):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=5 + i,
+                             key=jax.random.PRNGKey(30 + i),
+                             temperature=0.0 if i == 0 else 0.8))
+        out = {}
+        for t in range(60):
+            if t == 1:                      # staggered join
+                b.submit(Request(rid=2, prompt=prompts[2],
+                                 max_new_tokens=7,
+                                 key=jax.random.PRNGKey(32),
+                                 temperature=0.8))
+            b.step()
+            if not b.queue and not b.active:
+                break
+        return {r.rid: list(r.tokens) for r in b.completed}
+
+    per_token, macro = run(False), run(True)
+    assert per_token == macro, "macro-step diverged from per-token paged"
+    for i, p in enumerate(prompts):
+        steps = [5, 6, 7][i]
+        temp = 0.0 if i == 0 else 0.8
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                  steps=steps, temperature=temp,
+                                  key=jax.random.PRNGKey(30 + i)))[0].tolist()
+        assert macro[i] == ref, f"request {i} diverged from generate"
+
+
+def test_macro_step_eos_retires_mid_macro():
+    """A sampled EOS stops a row inside the macro launch: the emitted
+    stream truncates exactly at the EOS token and the row's pages are
+    released at the macro boundary."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    key = jax.random.PRNGKey(5)
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompt)[None],
+                              steps=8, key=key))[0].tolist()
+    eos = ref[3]                 # stops inside the first macro launch
+
+    mon = _tiny_serving_stack(cfg, params)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, macro=True, macro_steps=8)
+    b.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, key=key,
+                     eos_id=eos))
+    got = b.run()
+    assert got[0] == ref[: ref.index(eos) + 1]
+    assert mon.pools.free_pages == mon.pools.n_logical
+
+
+def test_macro_step_merges_once_per_period(monkeypatch):
+    """The host-side mass merge collapses to ONE call per movement period
+    (vs one per token on the per-token path), and the monitor is fed
+    through on_macro_step with a forced tier at the boundary."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    counts = {"merge": 0}
+
+    mon = _tiny_serving_stack(cfg, params)
+    orig = mon.merge
+
+    def counting_merge(contribs):
+        counts["merge"] += 1
+        return orig(contribs)
+
+    monkeypatch.setattr(mon, "merge", counting_merge)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, macro=True, macro_steps=8)
+    b.submit(Request(rid=0,
+                     prompt=rng.integers(0, cfg.vocab_size, size=8)
+                     .astype(np.int32), max_new_tokens=16))
+    got = b.run()
+    assert len(got[0]) == 16
+    # 16 tokens = 1 prefill sample + 15 decode steps in ceil(15/8) = 2
+    # macro launches -> 2 merges, not 15
+    assert counts["merge"] == 2, counts
+    assert mon.tuner.collector.num_samples > 0
+    assert mon.manager.hits > 0
+
+
+def test_collector_dt_records_gaps_in_token_steps():
+    """Macro feeding (one observe per movement period, dt = macro length)
+    must leave reuse gaps denominated in TOKEN steps -- the same unit the
+    derived period is actuated in -- not in observe calls."""
+    col = StreamingReuseCollector(4, bin_width=1)
+    col.observe(np.array([1]), dt=8)
+    col.observe(np.array([1]), dt=8)
+    assert col.step == 16, "the clock advances by dt, not by calls"
+    assert col.num_samples == 1
+    assert col._gaps[-1][1] == 8, "gap == the macro span in tokens"
+
+
+def test_tuner_dt_advances_windows_in_token_steps():
+    """OnlineTuner windows (profile/trial) count token-steps under macro
+    feeding: a 16-token profile completes after two 8-token macros."""
+    tuner = OnlineTuner(8, profile_steps=16, trial_steps=4, bin_width=1)
+    mass = np.zeros(8, np.float32)
+    mass[2] = 1.0
+    tuner.on_step(page_mass=mass, cost=8.0, dt=8)
+    assert tuner.state == tuner.PROFILE
+    tuner.on_step(page_mass=mass, cost=8.0, dt=8)
+    assert tuner.state == tuner.TRIAL, \
+        "16 token-steps profiled in 2 macro feeds must start trials"
+
+
 def test_paged_attention_window_and_softcap_match_reference():
     """The Pallas kernel's sliding-window mask and tanh softcap (the
     local-layer path of fully-paged decode) match the jnp oracle."""
