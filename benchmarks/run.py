@@ -57,6 +57,23 @@ def smoke() -> None:
         "bucketed paged rows must cut peak cache memory by >= 25% vs the " \
         f"dense max_len provisioning (got {tr['cache_memory']['reduction']:.1%})"
 
+    # hostile traffic: the hardened tuner must ride out flash crowds,
+    # correlated bursts and diurnal swings within 1.15x of the best fixed
+    # period in EVERY phase, and a poisoned TRIAL sweep must revert to
+    # the last attested period (results land in BENCH_hostile.json)
+    with Timer() as t:
+        ho = traffic.hostile(quick=True)
+    pt = ho["poisoned_trial"]
+    print(f"smoke_hostile,{t.us:.0f},max_regret={ho['max_regret']:.3f};"
+          f"guard_reverted={pt['reverted']};"
+          f"tune_cycles={ho['tuner']['tune_cycles']}")
+    assert ho["max_regret"] <= 1.15, \
+        "hostile traffic shook the tuner: per-phase regret must stay " \
+        f"<= 1.15x best fixed (got {ho['max_regret']:.3f}x)"
+    assert pt["reverted"], \
+        "poisoned TRIAL sweep must abort and revert to the last " \
+        f"attested period (got {pt})"
+
     # serving throughput: the macro-step hot loop must not regress below
     # the per-token paged path, with the four-way bit-parity bar intact
     # (results land in BENCH_serving.json for cross-PR tracking)
@@ -145,6 +162,13 @@ def main(argv=None) -> None:
           f"vs_best_fixed_steady={tr['online_vs_best_fixed_steady']:.3f};"
           f"token_identical={tr['token_parity']['token_identical']};"
           f"completed={tr['requests']['completed']}")
+
+    with Timer() as t:
+        ho = traffic.hostile(quick=q)
+    print(f"traffic_hostile,{t.us:.0f},max_regret={ho['max_regret']:.3f};"
+          f"guard_reverted={ho['poisoned_trial']['reverted']};"
+          f"tune_cycles={ho['tuner']['tune_cycles']};"
+          f"guard_trips={ho['tuner']['guard_trips']}")
 
     with Timer() as t:
         sp = traffic.serving_perf(quick=q)

@@ -24,6 +24,13 @@ requests share one HBM slot pool through ``serve.sched``.  Reports:
     (dense == per-token paged == macro-step == per-request generate).
     Written to ``BENCH_serving.json`` so the serving perf trajectory is
     tracked across PRs.
+  * the hostile-traffic replay (``hostile``): the online tuner rides a
+    four-phase adversarial stream (plain Poisson, then flash crowds,
+    correlated bursts and a diurnal swing -- ``repro.core.traffic``) and
+    its per-phase regret vs the best fixed period must stay <= 1.15x in
+    EVERY phase, plus a deterministic poisoned-TRIAL demo asserting the
+    cost-spike guardrail reverts to the last attested period.  Written to
+    ``BENCH_hostile.json``; both bars are asserted under ``--smoke``.
 
     PYTHONPATH=src python -m benchmarks.traffic [--quick | --smoke]
 """
@@ -133,6 +140,142 @@ def run(quick: bool = False) -> Dict:
     }
     save_json("traffic", out)
     return out
+
+
+HOSTILE_MIX = {"random": 0.7, "sink": 0.3}
+HOSTILE_FIXED = (1, 2, 4, 8, 16, 64)
+
+
+def _hostile_stream(phase_steps: int, seed: int = 0):
+    """Four phases of identical mix and mean rate, escalating hostility:
+    plain Poisson, flash crowds, correlated bursts, a diurnal swing.  The
+    optimum barely moves across phases, so any per-phase regret the online
+    run shows is the hostile *shape* shaking the tuner -- exactly what the
+    guardrail/variance/warm-retune defenses exist to prevent."""
+    rate = 0.09
+    return shifting_mix_stream(
+        [(phase_steps, rate, HOSTILE_MIX),
+         (phase_steps, rate, HOSTILE_MIX,
+          {"gen": "flash_crowd", "spike_factor": 6.0, "spike_every": 120,
+           "spike_len": 10}),
+         (phase_steps, rate, HOSTILE_MIX, {"gen": "burst", "burst_size": 5}),
+         (phase_steps, rate, HOSTILE_MIX,
+          # swing period deliberately NOT scaled with phase length: a
+          # 300-step cycle is what a drift detector with ~35-step windows
+          # and patience 3 must ride out -- much slower swings are
+          # indistinguishable from genuine regime changes and SHOULD
+          # re-tune
+          {"gen": "diurnal", "swing_period": 300, "amplitude": 0.6})],
+        prompt_len=(16, 48), new_tokens=(40, 100), seed=seed)
+
+
+def _trajectory(specs, steps: int, *, period: int = 8,
+                tuner: Optional[OnlineTuner] = None):
+    """Replay one stream recording the full modeled-time trajectory, so one
+    deterministic run yields the exact cost of every phase window."""
+    pools = SharedPagedPools.create(N_LOGICAL, HBM_PAGES)
+    mgr = TieringManager(N_LOGICAL, TierConfig(
+        page_size=PAGE, hbm_pages=HBM_PAGES, period_steps=period))
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr, tuner),
+                             page_size=PAGE, max_active=MAX_ACTIVE)
+    traj = np.zeros(steps + 1)
+    for t in range(steps):
+        sched.step()
+        traj[t + 1] = mgr.modeled_time
+    return sched, tuner, traj
+
+
+def _poisoned_trial_revert() -> Dict:
+    """Deterministic guardrail demo: converge a tuner on a clean synthetic
+    workload (attesting period 8 at cost ~1), force a re-tune sweep, then
+    poison the TRIAL windows with a spiky cost (whole period-buckets
+    alternating 300x/clean).  The cost-spike guardrail must abort the
+    sweep and revert to the attested period instead of crowning whichever
+    candidate the spikes happened to spare."""
+    tuner = OnlineTuner(64, default_period=2, profile_steps=32,
+                        trial_steps=32, horizon_steps=64, bin_width=1,
+                        patience=3)
+    ids = lambda t: np.array([t % 4])        # every reuse gap is exactly 4
+    for t in range(600):
+        tuner.on_step(accessed_ids=ids(t), cost=abs(tuner.period - 8) + 1.0)
+    attested = tuner.last_good_period
+    tuner._reprofile()                       # force the re-tune sweep
+    poisoned_steps = 0
+    while tuner.state == OnlineTuner.TRIAL and poisoned_steps < 200:
+        c = 300.0 if (poisoned_steps // 8) % 2 == 0 else 1.0
+        tuner.on_step(accessed_ids=ids(poisoned_steps), cost=c)
+        poisoned_steps += 1
+    return {
+        "attested_period": attested,
+        "final_period": tuner.period,
+        "state": tuner.state,
+        "guard_trips": tuner.guard_trips,
+        "steps_to_abort": poisoned_steps,
+        "reverted": (tuner.state == OnlineTuner.HOLD
+                     and tuner.period == attested
+                     and tuner.guard_trips >= 1),
+    }
+
+
+def hostile(quick: bool = False) -> Dict:
+    phase = 350 if quick else 600
+    window = 120 if quick else 150
+    steps = 4 * phase
+    specs = _hostile_stream(phase)
+
+    # shorter profile/trial windows than run(): the tuner must be settled
+    # well before the first phase window closes, and the variance-scaled
+    # extension recovers the averaging when a phase is genuinely noisy
+    tuner = OnlineTuner(N_LOGICAL, default_period=8, profile_steps=48,
+                        trial_steps=24, drift_ratio=1.5, drift_patience=3)
+    sched, tuner, online_traj = _trajectory(specs, steps, tuner=tuner)
+    fixed_traj = {p: _trajectory(specs, steps, period=p)[2]
+                  for p in HOSTILE_FIXED}
+
+    names = ("poisson", "flash_crowd", "burst", "diurnal")
+    phases = []
+    for i, name in enumerate(names):
+        e = (i + 1) * phase
+        s = e - window
+        online_cost = (online_traj[e] - online_traj[s]) / window
+        fixed = {str(p): (tr[e] - tr[s]) / window
+                 for p, tr in fixed_traj.items()}
+        best = min(fixed.values())
+        phases.append({"phase": name, "online_steady": online_cost,
+                       "fixed_steady": fixed, "best_fixed": best,
+                       "regret": online_cost / best})
+
+    out = {
+        "steps": steps,
+        "requests": {"submitted": len(specs), "admitted": sched.admitted,
+                     "completed": sched.completed},
+        "phases": phases,
+        "max_regret": max(p["regret"] for p in phases),
+        "tuner": {"final_period": tuner.period, "state": tuner.state,
+                  "tune_cycles": tuner.retunes,
+                  "guard_trips": tuner.guard_trips,
+                  "window_extensions": tuner.window_extensions,
+                  "period_history": tuner.history},
+        "poisoned_trial": _poisoned_trial_revert(),
+    }
+    save_json("BENCH_hostile", out)
+    return out
+
+
+def _print_hostile(ho: Dict) -> None:
+    for p in ho["phases"]:
+        print(f"hostile[{p['phase']:>11s}]: online {p['online_steady']:8.2f}"
+              f"/step vs best fixed {p['best_fixed']:8.2f} "
+              f"(regret {p['regret']:.3f}x)")
+    t = ho["tuner"]
+    print(f"hostile tuner: period={t['final_period']} ({t['state']}), "
+          f"{t['tune_cycles']} tune cycles, {t['guard_trips']} guard trips, "
+          f"{t['window_extensions']} window extensions")
+    pt = ho["poisoned_trial"]
+    print(f"poisoned trial: reverted={pt['reverted']} "
+          f"(period {pt['final_period']} == attested "
+          f"{pt['attested_period']}, {pt['guard_trips']} guard trips, "
+          f"abort after {pt['steps_to_abort']} poisoned steps)")
 
 
 def _token_parity(quick: bool) -> Dict:
@@ -339,6 +482,14 @@ if __name__ == "__main__":
         assert sp["speedup_macro_vs_per_token"] >= 1.3, \
             "macro-step decode must beat the per-token paged path by " \
             f">= 1.3x (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+        ho = hostile(quick=True)
+        _print_hostile(ho)
+        assert ho["max_regret"] <= 1.15, \
+            "hostile traffic shook the tuner: per-phase regret must stay " \
+            f"<= 1.15x best fixed (got {ho['max_regret']:.3f}x)"
+        assert ho["poisoned_trial"]["reverted"], \
+            "poisoned TRIAL sweep must abort and revert to the last " \
+            f"attested period (got {ho['poisoned_trial']})"
         raise SystemExit(0)
     r = run(args.quick)
     o = r["online"]
@@ -359,4 +510,5 @@ if __name__ == "__main__":
     print(f"token parity: {tp['token_identical']} over {tp['requests']} "
           f"requests; paged kernel max diff {tp['paged_kernel_max_diff']:.1e};"
           f" pages released: {tp['pages_all_released']}")
+    _print_hostile(hostile(args.quick))
     _print_serving(serving_perf(args.quick))

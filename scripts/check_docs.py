@@ -27,6 +27,10 @@ CODE_PATH = re.compile(
     r"`((?:src|docs|benchmarks|tests|examples|scripts)/[A-Za-z0-9_./-]+)`")
 MODULE_REF = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
 
+#: Runtime-generated (gitignored) locations: docs may legitimately point
+#: at benchmark outputs that do not exist in a fresh checkout.
+GENERATED = ("benchmarks/out/",)
+
 
 def md_files(root: pathlib.Path):
     yield from sorted(root.glob("*.md"))
@@ -72,6 +76,8 @@ def check(root: pathlib.Path) -> int:
                 errors.append(f"{md.relative_to(root)}: broken link "
                               f"-> {target}")
         for m in CODE_PATH.finditer(text):
+            if m.group(1).startswith(GENERATED):
+                continue
             path = m.group(1).rstrip("/")
             if not (root / path).exists():
                 errors.append(f"{md.relative_to(root)}: missing path "

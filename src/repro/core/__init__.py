@@ -22,8 +22,11 @@ from repro.core.sim import (SCHEDULERS, SimConfig, SimResult, TraceBins,
                             bin_trace, exhaustive_periods, simulate,
                             simulate_reference, sweep, sweep_loop)
 from repro.core.traces import TRACE_GENERATORS, Trace, available_traces, generate
-from repro.core.traffic import (RequestSpec, poisson_request_stream,
-                                shifting_mix_stream)
+from repro.core.traffic import (RequestSpec, correlated_burst_stream,
+                                diurnal_stream, flash_crowd_stream,
+                                invert_kinds, mix_inversion_stream,
+                                modulated_request_stream,
+                                poisson_request_stream, shifting_mix_stream)
 
 __all__ = [
     "AppStudy", "BASELINE_ORDERS", "CoriRun", "OnlineTuner", "RequestSpec",
@@ -32,6 +35,8 @@ __all__ = [
     "TRACE_GENERATORS", "Trace", "TraceBins",
     "Tuner", "TuneResult", "available_traces", "base_candidates",
     "baseline_trials", "baseline_trials_all", "bin_trace", "candidate_periods", "dominant_reuse",
+    "correlated_burst_stream", "diurnal_stream", "flash_crowd_stream",
+    "invert_kinds", "mix_inversion_stream", "modulated_request_stream",
     "exhaustive_periods", "generate", "loop_duration_histogram",
     "optimal_runtime", "ordered_candidates", "poisson_request_stream",
     "prune_insignificant", "reuse_distance_histogram",

@@ -70,7 +70,7 @@ def dominant_reuse(hist: ReuseHistogram) -> float:
     w = (n - np.arange(1, n + 1, dtype=np.float64)) * repeat  # (N - i) * repeat_i
     denom = w.sum()
     if denom <= 0:  # degenerate: all weight on the longest reuse
-        return float(reuse[0])
+        return float(reuse[-1])
     return float((w * reuse).sum() / denom)
 
 
@@ -108,7 +108,8 @@ class TuneResult:
 
     @property
     def best_runtime_tried(self) -> float:
-        return float(np.min(self.tried_runtimes))
+        finite = self.tried_runtimes[np.isfinite(self.tried_runtimes)]
+        return float(finite.min()) if finite.size else float("inf")
 
 
 class Tuner:
@@ -147,7 +148,10 @@ class Tuner:
             rt = float(self.evaluate(float(p)))
             tried_p.append(float(p))
             tried_rt.append(rt)
-            if rt < best_rt * (1.0 - self.rel_tol):
+            # a NaN/inf runtime is a failed trial, never an improvement: it
+            # must not become best_rt (NaN would poison every later
+            # comparison) and counts as a stale trial like any non-improver
+            if np.isfinite(rt) and rt < best_rt * (1.0 - self.rel_tol):
                 best_rt, best_p, stale = rt, float(p), 0
             else:
                 stale += 1
@@ -156,7 +160,10 @@ class Tuner:
             if self.max_trials is not None and len(tried_p) >= self.max_trials:
                 break
         if not np.isfinite(best_rt):
-            best_rt, best_p = tried_rt[0], tried_p[0]
+            # every trial came back non-finite: keep the ladder head but
+            # report an infinite runtime rather than adopting a poisoned
+            # NaN as the "measured" chosen_runtime
+            best_rt, best_p = float("inf"), tried_p[0]
         return TuneResult(best_p, best_rt, len(tried_p),
                           np.asarray(tried_p), np.asarray(tried_rt), candidates)
 
@@ -201,6 +208,41 @@ class OnlineTuner:
     period makes per-step costs oscillate and fakes drift on a perfectly
     stable workload.
 
+    Three defenses harden the state machine against *adversarial* traffic
+    (flash crowds, correlated bursts, abrupt mix inversions -- the hostile
+    suite in ``core.traffic``):
+
+      * **Cost-spike guardrail** (``guard_ratio``).  If a TRIAL window's
+        running per-step tail cost blows past ``guard_ratio`` x the
+        last *attested* cost (a completed sweep's winner or a clean HOLD
+        baseline), the sweep is *aborted* -- the spiked
+        candidate is never adopted; the tuner falls back to the cleanly
+        ranked best (or the last-good period) and re-enters HOLD.  In
+        HOLD, a window beyond the guard ratio is a burst, not a baseline:
+        it is discarded rather than baselined or struck, and only
+        ``drift_patience`` *consecutive* guard-level windows (a sustained
+        regime change) force a re-profile.  Non-finite costs are treated
+        as +inf so a NaN can never win a ladder or silently poison the
+        baseline.
+      * **Variance-scaled trial windows** (``var_cv``).  Trial windows
+        whose per-period cost variance is high (coefficient of variation
+        over whole-period buckets above ``var_cv``) double, up to
+        ``var_max_factor`` x ``trial_steps``; the noisy segment becomes
+        head (warmup) and the tail restarts, so a heavy-tailed burst does
+        not de-noise into a wrong ranking.  Buckets span whole periods,
+        so a stationary workload's within-period migration burst pattern
+        does not read as variance.
+      * **Warm re-tunes** (``warm_start``).  A drift/improve re-tune
+        rebuilds the ladder from the *live* rolling collector window and
+        goes straight to TRIAL (no PROFILE stage), exploring outward
+        from the previous winner (bandit-style nearest-first) instead of
+        shortest-first -- a mild phase change re-converges in
+        ~``patience``+1 trials instead of paying a profile window plus a
+        full sweep, while a large change still walks to the far end
+        because every improvement resets the stopping rule.  Only the
+        guard-strike escalation (a hostile regime change) pays the cold
+        collector reset + PROFILE.
+
     Drive it one decode step at a time with ``on_step``; it returns the
     period the tiering runtime should use *now*.
     """
@@ -219,7 +261,11 @@ class OnlineTuner:
                  bin_width: int = 1,
                  min_period: float = 1.0, access_threshold: float = 0.05,
                  rel_threshold: bool = False,
-                 max_candidates: int = 16, cost_log_len: int = 4096):
+                 max_candidates: int = 16, cost_log_len: int = 4096,
+                 guard_ratio: Optional[float] = 6.0,
+                 var_cv: Optional[float] = 0.3,
+                 var_max_factor: int = 4,
+                 warm_start: bool = True):
         self.collector = StreamingReuseCollector(
             n_pages, window=window or 4 * profile_steps, bin_width=bin_width)
         self.profile_steps = profile_steps
@@ -237,6 +283,10 @@ class OnlineTuner:
         self.access_threshold = access_threshold
         self.rel_threshold = rel_threshold
         self.max_candidates = max_candidates
+        self.guard_ratio = guard_ratio
+        self.var_cv = var_cv
+        self.var_max_factor = max(1, int(var_max_factor))
+        self.warm_start = warm_start
 
         self.state = self.PROFILE
         self.period = int(default_period)
@@ -248,11 +298,26 @@ class OnlineTuner:
         self.retunes = 0          # completed PROFILE->TRIAL->HOLD cycles
         self.history: List[Tuple[int, int]] = []     # (step, period) changes
         self.converged_at: Optional[int] = None      # step of last HOLD entry
+        # guardrail fallback: the last period attested by a clean sweep or
+        # HOLD baseline, and the per-step cost it achieved (inf = nothing
+        # attested yet, e.g. right after a phase-change re-profile)
+        self.last_good_period = int(default_period)
+        self.last_good_cost = float("inf")
+        self.guard_trips = 0        # guard aborts + discarded HOLD windows
+        self.window_extensions = 0  # variance-driven trial-window doublings
         # recent per-step costs (bounded: this object lives in a serving loop)
         self.cost_log: "collections.deque[float]" = collections.deque(
             maxlen=cost_log_len)
         self._drift_strikes = 0
         self._improve_strikes = 0
+        self._guard_strikes = 0
+        self._hold_skip = False
+        self._resweep_pending = False
+        self._warm_next = True
+        # winner's attested trial cost from the most recent sweep: floors
+        # the first clean HOLD baseline (one quiet window must not arm a
+        # hair-trigger drift detector)
+        self._sweep_cost: Optional[float] = None
         self._trial_idx = 0
         self._best_cost = np.inf
         self._best_period = self.period
@@ -261,6 +326,14 @@ class OnlineTuner:
         self._win_steps = 0
         self._tail_cost = 0.0
         self._tail_steps = 0
+        self._win_target = self._cost_window()
+        self._tail_begin = self._win_target - self._tail_window()
+        # per-period cost buckets feeding the window-variance signal
+        self._seg_sum = 0.0
+        self._seg_sq = 0.0
+        self._seg_n = 0
+        self._bucket_cost = 0.0
+        self._bucket_steps = 0
 
     # -- per-step entry point ------------------------------------------------
     def on_step(self, page_mass: Optional[np.ndarray] = None,
@@ -283,21 +356,47 @@ class OnlineTuner:
         elif page_mass is not None:
             self.collector.observe_mass(page_mass, self.access_threshold,
                                         relative=self.rel_threshold, dt=dt)
-        self._win_cost += float(cost)
+        cost = float(cost)
+        if not np.isfinite(cost):
+            # a NaN/inf measurement is hostile garbage: pin it to +inf so
+            # it reads as "arbitrarily expensive" (the guardrail catches
+            # it) instead of silently propagating NaN through every
+            # window mean and comparison
+            cost = float("inf")
+        per_step = cost / dt
+        self._win_cost += cost
         self._win_steps += dt
-        self.cost_log.append(float(cost))
+        # the log is uniformly PER-STEP: raw observation costs would mix
+        # per-token and per-macro magnitudes whenever dt varies
+        self.cost_log.append(per_step)
         self.step += dt
         if self.state == self.PROFILE:
             if self._win_steps >= self.profile_steps:
                 self._begin_trials()
         elif self.state == self.TRIAL:
-            if self._win_steps > self._cost_window() - self._tail_window():
-                self._tail_cost += float(cost)
-                self._tail_steps += dt
-            if self._win_steps >= self._cost_window():
-                self._finish_trial()
+            # tail accounting: the observation spans [win_steps - dt,
+            # win_steps); an observation straddling the head/tail boundary
+            # charges only its tail overlap (charging its whole macro cost
+            # to the tail biases the tail mean under macro dt > 1)
+            overlap = self._win_steps - max(self._win_steps - dt,
+                                            self._tail_begin)
+            if overlap > 0:
+                self._tail_cost += cost * (overlap / dt)
+                self._tail_steps += overlap
+                # variance buckets also cover the tail only: the head's
+                # residency transient is *expected* to be expensive, and
+                # letting it into the buckets would read every period
+                # switch as heavy-tailed noise worth extending over
+                self._observe_period_bucket(per_step, overlap)
+            if self._guard_tripped():
+                self._trip_guard()
+            elif self._win_steps >= self._win_target:
+                if self._should_extend():
+                    self._extend_window()
+                else:
+                    self._finish_trial()
         else:  # HOLD
-            if self._win_steps >= self._cost_window():
+            if self._win_steps >= self._win_target:
                 self._check_drift()
         return self.period
 
@@ -315,6 +414,144 @@ class OnlineTuner:
         p = max(1, self.period)
         return max(1, (self._cost_window() // (2 * p))) * p
 
+    # -- guardrail + variance machinery --------------------------------------
+    def _observe_period_bucket(self, per_step: float, dt: int) -> None:
+        """Accumulate the observation into whole-period cost buckets (the
+        variance signal).  Buckets span exactly one period, so a stationary
+        workload's within-period burst structure (a migration burst at
+        every tiering boundary) contributes ZERO across-bucket variance;
+        only bucket-to-bucket change -- a flash crowd, a correlated burst
+        -- reads as noise worth extending the window over.  Always
+        accumulated (even with ``var_cv=None``): the guardrail's
+        burst-vs-regime verdict reads the same buckets."""
+        p = max(1, self.period)
+        rem = dt
+        while rem > 0:
+            take = min(rem, p - self._bucket_steps)
+            self._bucket_cost += per_step * take
+            self._bucket_steps += take
+            rem -= take
+            if self._bucket_steps >= p:
+                x = self._bucket_cost
+                self._seg_sum += x
+                self._seg_sq += x * x
+                self._seg_n += 1
+                self._bucket_cost = 0.0
+                self._bucket_steps = 0
+
+    def _guard_ref(self) -> float:
+        """Per-step cost the guardrail compares against: the last cost
+        *attested* by a completed sweep or a clean HOLD baseline.  The
+        in-sweep best is deliberately NOT used -- candidates are measured
+        under different stretches of traffic, and a merely-expensive
+        candidate must rank (and lose) normally rather than abort the
+        sweep against a sibling that happened to be measured cheaply.
+        Before anything is attested (first sweep, post-reset) the ref is
+        inf and the sweep runs unguarded."""
+        return self.last_good_cost
+
+    def _guard_tripped(self) -> bool:
+        if self.guard_ratio is None:
+            return False
+        ref = self._guard_ref()
+        if not np.isfinite(ref) or ref <= 0:
+            return False                 # nothing attested yet: unguarded
+        if self._seg_n < 2:
+            # judge only the ranking tail, and only once it holds two
+            # whole-period buckets: the head legitimately carries the
+            # period-switch residency transient (that is what the head
+            # discard is for, and a spike confined to the head cannot
+            # poison the ranking anyway), and the burst-vs-regime verdict
+            # needs at least two buckets to compare
+            return False
+        return (self._tail_cost / self._tail_steps
+                > self.guard_ratio * ref)
+
+    def _tail_bucket_cv(self) -> float:
+        """Coefficient of variation of the tail's whole-period cost buckets
+        (NaN when fewer than two buckets or the mean is not usable)."""
+        if self._seg_n < 2:
+            return float("nan")
+        mean = self._seg_sum / self._seg_n
+        if not np.isfinite(mean) or mean <= 0:
+            return float("nan")
+        var = max(0.0, self._seg_sq / self._seg_n - mean * mean)
+        return (var ** 0.5) / mean
+
+    def _trip_guard(self) -> None:
+        """The TRIAL tail blew past the guard ratio -- decide burst vs
+        regime change by the *shape* of the tail: spiky buckets (CV above
+        ``var_cv``, or unmeasurable -- e.g. a NaN pinned to inf) mean a
+        burst is poisoning the window, so abort the sweep and revert;
+        uniformly elevated buckets mean the cost regime itself moved, so
+        the stale anchor (and reuse info) must go -- cold re-profile."""
+        cv = self._tail_bucket_cv()
+        spiky_above = self.var_cv if self.var_cv is not None else 0.5
+        if not np.isfinite(cv) or cv > spiky_above:
+            self._abort_sweep()
+        else:
+            self.guard_trips += 1
+            self._reprofile(cold=True)
+            self._arm_window()
+
+    def _abort_sweep(self) -> None:
+        """Cost-spike guardrail: the running TRIAL window blew past
+        ``guard_ratio`` x the best-known cost -- a burst is poisoning the
+        sweep.  Abort it: adopt the best candidate already ranked cleanly
+        this sweep (if any), else revert to the last-good period, and
+        fall back to HOLD.  A sustained spike then re-profiles through the
+        HOLD guard once its patience runs out."""
+        self.guard_trips += 1
+        if np.isfinite(self._best_cost):
+            # the sweep still produced a cleanly ranked winner: adopting it
+            # completes the cycle, so it counts as a re-tune
+            self._set_period(self._best_period)
+            self.last_good_period = self.period
+            self.last_good_cost = min(self.last_good_cost, self._best_cost)
+            self.retunes += 1
+        else:
+            self._set_period(self.last_good_period)
+        self.state = self.HOLD
+        self.baseline_cost = None
+        self._sweep_cost = (float(self._best_cost)
+                            if np.isfinite(self._best_cost) else None)
+        self._drift_strikes = 0
+        self._improve_strikes = 0
+        self._guard_strikes = 0
+        self._hold_skip = True
+        # the truncated sweep only half-ranked the ladder: once HOLD
+        # re-attests a clean baseline (the burst passed, or the new cost
+        # level proved real), finish the job with a warm re-sweep
+        self._resweep_pending = True
+        self.converged_at = self.step
+        self._arm_window()
+
+    def _should_extend(self) -> bool:
+        """Variance-scaled trial windows: extend when the window's
+        per-period cost buckets are heavy-tailed (coefficient of variation
+        above ``var_cv``), up to ``var_max_factor`` x the base window."""
+        if self.var_cv is None:
+            return False
+        if self._win_target >= self.var_max_factor * self._cost_window():
+            return False
+        cv = self._tail_bucket_cv()
+        return np.isfinite(cv) and cv > self.var_cv
+
+    def _extend_window(self) -> None:
+        """Double the trial window: the just-measured noisy segment becomes
+        head (warmup) and the ranking tail restarts, so the burst that
+        triggered the extension cannot de-noise into the ranking."""
+        self.window_extensions += 1
+        self._tail_begin = self._win_target
+        self._win_target += self._win_target   # stays a period multiple
+        self._tail_cost = 0.0
+        self._tail_steps = 0
+        self._seg_sum = 0.0
+        self._seg_sq = 0.0
+        self._seg_n = 0
+        self._bucket_cost = 0.0
+        self._bucket_steps = 0
+
     # -- state transitions ---------------------------------------------------
     def _set_period(self, period: float) -> None:
         p = max(1, int(round(period)))
@@ -322,19 +559,31 @@ class OnlineTuner:
             self.history.append((self.step, p))
         self.period = p
 
-    def _reset_window(self) -> None:
+    def _arm_window(self) -> None:
+        """Zero the accumulators and re-arm the measurement window for the
+        period now in force (call AFTER ``_set_period``)."""
         self._win_cost = 0.0
         self._win_steps = 0
         self._tail_cost = 0.0
         self._tail_steps = 0
+        self._win_target = self._cost_window()
+        self._tail_begin = self._win_target - self._tail_window()
+        self._seg_sum = 0.0
+        self._seg_sq = 0.0
+        self._seg_n = 0
+        self._bucket_cost = 0.0
+        self._bucket_steps = 0
 
     def _begin_trials(self) -> None:
         hist = self.collector.histogram()
         if hist.num_bins == 0:
             # nothing re-accessed yet: keep the default period, try again
             # after another profile window
-            self._reset_window()
+            self._arm_window()
             return
+        self._launch_trials(hist)
+
+    def _launch_trials(self, hist: ReuseHistogram) -> None:
         self.dominant_reuse = dominant_reuse(hist)
         ladder = candidate_periods(self.dominant_reuse,
                                    float(self.horizon_steps),
@@ -343,7 +592,20 @@ class OnlineTuner:
         # a candidate longer than the trial window cannot be observed even
         # once per window -- clip the ladder (keep at least the head)
         feasible = ladder[ladder <= self.trial_steps]
-        self.candidates = feasible if feasible.size else ladder[:1]
+        cand = feasible if feasible.size else ladder[:1]
+        if self.warm_start and self.retunes > 0 and self._warm_next:
+            # warm re-tune: explore outward from the previous winner
+            # (bandit-style) instead of re-walking the ladder shortest-
+            # first -- a mild phase change stops after ~patience+1 trials,
+            # a large one still reaches the far end because improvements
+            # keep resetting the stopping rule.  After a COLD reset the
+            # previous winner is exactly what proved stale, so the sweep
+            # reverts to the paper's shortest-first priority order.
+            order = np.argsort(np.abs(cand - float(self.last_good_period)),
+                               kind="stable")
+            cand = cand[order]
+        self._warm_next = True
+        self.candidates = cand
         self.tried = []
         self._trial_idx = 0
         self._best_cost = np.inf
@@ -351,10 +613,12 @@ class OnlineTuner:
         self._stale = 0
         self.state = self.TRIAL
         self._set_period(self.candidates[0])
-        self._reset_window()
+        self._arm_window()
 
     def _finish_trial(self) -> None:
         cost = self._tail_cost / max(1, self._tail_steps)
+        if not np.isfinite(cost):
+            cost = float("inf")
         self.tried.append((float(self.period), cost))
         if cost < self._best_cost * (1.0 - self.rel_tol):
             self._best_cost, self._best_period = cost, self.period
@@ -369,19 +633,70 @@ class OnlineTuner:
         if done:
             self.state = self.HOLD
             self.baseline_cost = None
+            self._sweep_cost = (float(self._best_cost)
+                                if np.isfinite(self._best_cost) else None)
             self._drift_strikes = 0
             self._improve_strikes = 0
+            self._guard_strikes = 0
+            # the first HOLD window inherits the residency transient from
+            # the period switch (the same transient TRIAL's head discard
+            # exists for): skip it before baselining
+            self._hold_skip = True
+            self._resweep_pending = False
             self.retunes += 1
             self.converged_at = self.step
             self._set_period(self._best_period)
+            if np.isfinite(self._best_cost):
+                self.last_good_period = self.period
+                self.last_good_cost = self._best_cost
         else:
             self._set_period(self.candidates[self._trial_idx])
-        self._reset_window()
+        self._arm_window()
 
     def _check_drift(self) -> None:
+        if self._hold_skip:
+            # period-switch transient window: measure nothing from it (a
+            # clean switch must not fake drift via a polluted baseline)
+            self._hold_skip = False
+            self._arm_window()
+            return
         cost = self._win_cost / max(1, self._win_steps)
+        ref = (self.baseline_cost if self.baseline_cost is not None
+               else self.last_good_cost)
+        if (self.guard_ratio is not None and np.isfinite(ref) and ref > 0
+                and cost > self.guard_ratio * ref):
+            # guardrail (HOLD): an extreme window is a burst, not a
+            # baseline -- discard it entirely.  Only a sustained run of
+            # guard-level windows (a regime change, not a flash crowd)
+            # forces the re-profile.
+            self.guard_trips += 1
+            self._guard_strikes += 1
+            self._drift_strikes = 0
+            self._improve_strikes = 0
+            if self._guard_strikes >= self.drift_patience:
+                self._reprofile(cold=True)
+            self._arm_window()
+            return
+        self._guard_strikes = 0
         if self.baseline_cost is None:
+            if self._sweep_cost is not None:
+                # the first clean window after a sweep can *undershoot* the
+                # regime's steady cost (residency is still settling), and a
+                # too-low baseline arms a hair-trigger drift detector -- the
+                # mirror image of the transient the _hold_skip window
+                # discards.  Floor the baseline with the winner's attested
+                # trial cost so one quiet window cannot set the reference.
+                cost = max(cost, self._sweep_cost)
             self.baseline_cost = cost
+            if np.isfinite(cost):
+                self.last_good_period = self.period
+                self.last_good_cost = cost
+            if self._resweep_pending:
+                # a guard abort truncated the last sweep; the clean window
+                # just re-anchored the guardrail, so re-rank the ladder now
+                # (warm -- explores outward from the adopted fallback)
+                self._resweep_pending = False
+                self._reprofile()
         elif cost > self.drift_ratio * max(self.baseline_cost, 1e-12):
             self._drift_strikes += 1
             self._improve_strikes = 0
@@ -401,13 +716,35 @@ class OnlineTuner:
         else:
             self._drift_strikes = 0
             self._improve_strikes = 0
-        self._reset_window()
+        self._arm_window()
 
-    def _reprofile(self) -> None:
-        self.collector.reset()
-        self.state = self.PROFILE
+    def _reprofile(self, cold: bool = False) -> None:
         self._drift_strikes = 0
         self._improve_strikes = 0
+        self._guard_strikes = 0
+        if not cold and self.warm_start:
+            # warm re-tune: the rolling collector window is still live, so
+            # the ladder can be rebuilt NOW and trialed outward from the
+            # previous winner -- skipping the PROFILE stage entirely.  The
+            # window may still carry some pre-drift reuse, but the trials
+            # rank candidates by *measured* cost, so a skewed ladder costs
+            # at most a few extra trials (and the next drift window gets a
+            # fresher histogram).
+            hist = self.collector.histogram()
+            if hist.num_bins > 0:
+                self._launch_trials(hist)
+                return
+        # cold reset (guard-strike escalation, or nothing collected yet):
+        # stale reuse info is worse than none.  A drift-triggered WARM
+        # re-tune keeps last_good_cost as the guard anchor (a mild drift
+        # sits far below the guard ratio); only the cold path -- reached
+        # when sustained guard-level cost proves a genuine regime change
+        # -- drops the stale anchor, so the fresh sweep cannot be trapped
+        # aborting against a cost level that no longer exists
+        self.last_good_cost = float("inf")
+        self._warm_next = False
+        self.collector.reset()
+        self.state = self.PROFILE
 
     # -- multi-request traffic hooks -----------------------------------------
     def forget_pages(self, ids: np.ndarray) -> None:

@@ -122,8 +122,20 @@ class TrafficMonitor:
         demand-fetch page misses are charged INSIDE the cost window (the
         macro path prefetches its horizon up front -- those misses are
         the price of the current period and must reach the tuner).
-        ``force_tier`` tiers regardless of the step cadence."""
+        ``force_tier`` tiers regardless of the step cadence.
+
+        The tuner's adversarial-traffic defenses (cost-spike guardrail,
+        variance-scaled trial windows, warm re-tunes -- see
+        ``OnlineTuner``) apply unchanged here: both the per-token and
+        the macro path route every cost observation through
+        ``tuner.on_step``, so a flash crowd poisoning a TRIAL mid-sweep
+        aborts to the last-good period on either path.  A non-finite
+        merged mass (a NaN'd attention row) is clamped to zero before it
+        can corrupt the reuse collector's accessed-set thresholding."""
         mgr = self.manager
+        if not np.all(np.isfinite(global_mass)):
+            global_mass = np.nan_to_num(global_mass, nan=0.0,
+                                        posinf=0.0, neginf=0.0)
         before = mgr.modeled_time
         if fetched:
             mgr.misses += fetched

@@ -139,3 +139,43 @@ def test_loop_duration_proxy_matches_trace_histogram():
     dr_trace = dominant_reuse(reuse_distance_histogram(tr.pages, 1000))
     dr_loops = dominant_reuse(loop_duration_histogram(tr.loop_durations, 1000))
     assert abs(dr_trace - dr_loops) / dr_trace < 0.15
+
+
+# ---------------------------------------------------------------------------
+# degenerate / hostile inputs (regression: adversarial-traffic hardening PR)
+# ---------------------------------------------------------------------------
+
+
+def test_dominant_reuse_degenerate_weight_on_longest():
+    """Eq. 1's (N - i) weights zero out the last (longest) reuse; when every
+    *other* bin has zero repeats the denominator is 0 and all surviving
+    weight sits on the longest reuse -- the degenerate branch must return
+    reuse[-1], not the shortest bin."""
+    assert dominant_reuse(_hist([10, 50], [0, 7])) == 50.0
+    assert dominant_reuse(_hist([5, 30, 900], [0, 0, 3])) == 900.0
+
+
+def test_tuner_nan_runtime_never_wins():
+    """A NaN trial must not become best_rt (it would poison every later
+    comparison) nor leak out of best_runtime_tried."""
+    curve = {1.0: float("nan"), 2.0: 50.0, 3.0: 60.0, 4.0: 70.0}
+    res = Tuner(lambda p: curve[p], patience=3).run([1.0, 2.0, 3.0, 4.0])
+    assert res.chosen_period == 2.0
+    assert res.chosen_runtime == 50.0
+    assert res.best_runtime_tried == 50.0
+
+
+def test_tuner_inf_runtime_never_wins():
+    curve = {1.0: float("inf"), 2.0: 5.0}
+    res = Tuner(lambda p: curve[p], patience=3).run([1.0, 2.0])
+    assert res.chosen_period == 2.0
+    assert res.best_runtime_tried == 5.0
+
+
+def test_tuner_all_non_finite_reports_inf():
+    """Every trial failing must surface as an *infinite* chosen runtime (a
+    comparable sentinel), never as an adopted NaN measurement."""
+    res = Tuner(lambda p: float("nan"), patience=2).run([1.0, 2.0, 3.0])
+    assert res.chosen_period == 1.0
+    assert np.isinf(res.chosen_runtime) and not np.isnan(res.chosen_runtime)
+    assert np.isinf(res.best_runtime_tried)

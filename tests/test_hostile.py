@@ -1,0 +1,378 @@
+"""Hostile-traffic suite: adversarial stream generators + tuner defenses.
+
+Covers the hardening PR end to end: the modulated-Poisson stream shapes
+(flash crowds, diurnal swings, correlated bursts, kind-mix inversions)
+and the OnlineTuner defenses they attack -- the TRIAL cost-spike
+guardrail (spiky poison aborts the sweep and reverts to last-good), the
+HOLD guard (a single extreme window is discarded, a sustained run
+escalates to a cold re-profile), variance-scaled trial windows, warm
+re-tune candidate ordering, and the winner-seeded HOLD baseline."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import (OnlineTuner, correlated_burst_stream, diurnal_stream,
+                        flash_crowd_stream, invert_kinds, mix_inversion_stream,
+                        shifting_mix_stream)
+
+
+# ---------------------------------------------------------------------------
+# hostile stream generators
+# ---------------------------------------------------------------------------
+
+
+def _per_step_counts(specs, steps, start=0):
+    counts = np.zeros(steps, np.int64)
+    for r in specs:
+        counts[r.arrival - start] += 1
+    return counts
+
+
+def test_flash_crowd_spikes_dominate_base_rate():
+    steps, rate = 600, 0.5
+    specs = flash_crowd_stream(steps, rate, {"random": 1.0},
+                               spike_factor=10.0, spike_every=200,
+                               spike_len=20, seed=1)
+    counts = _per_step_counts(specs, steps)
+    spike = np.array([(t % 200) < 20 for t in range(steps)])
+    spike_density = counts[spike].mean()
+    base_density = counts[~spike].mean()
+    assert spike_density > 4.0 * base_density
+    assert base_density == pytest.approx(rate, rel=0.5)
+
+
+def test_diurnal_swing_peak_vs_trough():
+    steps = 800
+    specs = diurnal_stream(steps, 1.0, {"random": 1.0},
+                           swing_period=400, amplitude=0.8, seed=2)
+    counts = _per_step_counts(specs, steps)
+    t = np.arange(steps)
+    peak = ((t % 400 >= 50) & (t % 400 < 150))     # around sin max at 100
+    trough = ((t % 400 >= 250) & (t % 400 < 350))  # around sin min at 300
+    assert counts[peak].mean() > 3.0 * max(counts[trough].mean(), 1e-9)
+
+
+def test_correlated_bursts_clump_and_preserve_mean_rate():
+    steps, rate, b = 2000, 0.5, 5
+    specs = correlated_burst_stream(steps, rate, {"random": 1.0},
+                                    burst_size=b, seed=3)
+    counts = _per_step_counts(specs, steps)
+    assert (counts % b == 0).all(), "arrivals must clump in whole bursts"
+    assert counts.sum() == pytest.approx(steps * rate, rel=0.2)
+    # variance is ~burst_size x Poisson: far above the mean rate
+    assert counts.var() > 2.0 * rate
+
+
+def test_invert_kinds_reverses_weights_and_is_involutive():
+    k = {"a": 0.7, "b": 0.2, "c": 0.1}
+    flipped = invert_kinds(k)
+    assert flipped == {"a": 0.1, "b": 0.2, "c": 0.7}
+    assert invert_kinds(flipped) == k
+    assert sum(flipped.values()) == pytest.approx(sum(k.values()))
+
+
+def test_mix_inversion_flips_dominant_kind_on_schedule():
+    specs = mix_inversion_stream(400, 2.0, {"a": 0.9, "b": 0.1},
+                                 invert_every=100, seed=4)
+    for seg, dominant in ((0, "a"), (1, "b"), (2, "a"), (3, "b")):
+        kinds = [r.kind for r in specs
+                 if seg * 100 <= r.arrival < (seg + 1) * 100]
+        frac = kinds.count(dominant) / max(1, len(kinds))
+        assert frac > 0.7, f"segment {seg} must be {dominant}-dominated"
+
+
+def test_shifting_mix_stream_dispatches_hostile_generators():
+    specs = shifting_mix_stream(
+        [(100, 1.0, {"a": 1.0}),
+         (100, 1.0, {"b": 1.0}, {"gen": "burst", "burst_size": 4}),
+         (100, 2.0, {"c": 1.0}, {"gen": "flash_crowd", "spike_factor": 6.0,
+                                 "spike_every": 50, "spike_len": 5})],
+        seed=5)
+    assert [r.rid for r in specs] == list(range(len(specs)))
+    by_phase = collections.defaultdict(list)
+    for r in specs:
+        by_phase[r.arrival // 100].append(r)
+    assert set(by_phase) == {0, 1, 2}
+    assert {r.kind for r in by_phase[0]} == {"a"}
+    assert {r.kind for r in by_phase[1]} == {"b"}
+    assert {r.kind for r in by_phase[2]} == {"c"}
+    counts = _per_step_counts(by_phase[1], 100, start=100)
+    assert (counts % 4 == 0).all(), "burst phase must clump in 4s"
+
+
+# ---------------------------------------------------------------------------
+# TRIAL cost-spike guardrail
+# ---------------------------------------------------------------------------
+
+
+def _converged_tuner(**kw):
+    """Drive a tuner to a clean HOLD at period 8 with attested cost ~1."""
+    params = dict(default_period=2, profile_steps=32, trial_steps=32,
+                  horizon_steps=64, bin_width=1, patience=3)
+    params.update(kw)
+    tuner = OnlineTuner(64, **params)
+    # 4-page round robin: every gap is exactly 4, so the ladder stays the
+    # multi-candidate [4, 8, ...] however far the sliding window advances
+    ids = lambda t: np.array([t % 4])
+    for t in range(600):
+        tuner.on_step(accessed_ids=ids(t), cost=abs(tuner.period - 8) + 1.0)
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.period == 8
+    assert np.isfinite(tuner.last_good_cost)
+    return tuner, ids
+
+
+def test_poisoned_trial_sweep_aborts_and_reverts_to_last_good():
+    """A spiky cost poison during a re-tune sweep must trip the guardrail
+    and revert to the last attested period instead of crowning whichever
+    candidate the burst happened to spare."""
+    tuner, ids = _converged_tuner()
+    retunes = tuner.retunes
+    tuner._reprofile()                       # force a (warm) re-tune sweep
+    assert tuner.state == OnlineTuner.TRIAL
+    assert tuner.period == 8, "warm sweep starts at the previous winner"
+    # spiky poison: whole 8-step buckets alternate 300x / clean, so the
+    # tail mean blows past guard_ratio x last_good AND the bucket CV reads
+    # as a burst (not a uniform regime change)
+    for i in range(200):
+        if tuner.state != OnlineTuner.TRIAL:
+            break
+        c = 300.0 if (i // 8) % 2 == 0 else 1.0
+        tuner.on_step(accessed_ids=ids(i), cost=c)
+    assert tuner.guard_trips >= 1
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.period == 8, "must revert to the last-good period"
+    assert tuner.retunes == retunes, "an aborted sweep is not a re-tune"
+    assert tuner._resweep_pending, "truncated sweep owes a re-rank"
+
+
+def test_nan_cost_poison_does_not_propagate_or_crash():
+    """NaN/inf cost measurements are pinned to +inf: the guardrail eats
+    them (unmeasurable CV == burst -> abort to last-good) and no NaN ever
+    reaches the baseline, the ranking, or the period."""
+    tuner, ids = _converged_tuner()
+    tuner._reprofile()
+    assert tuner.state == OnlineTuner.TRIAL
+    for i in range(200):
+        if tuner.state != OnlineTuner.TRIAL:
+            break
+        tuner.on_step(accessed_ids=ids(i), cost=float("nan"))
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.period == 8
+    assert tuner.guard_trips >= 1
+    assert isinstance(tuner.period, int)
+    assert tuner.baseline_cost is None or np.isfinite(tuner.baseline_cost)
+    # the log records the pinned +inf, never NaN
+    assert not any(np.isnan(c) for c in tuner.cost_log)
+
+
+def test_uniform_regime_change_mid_sweep_goes_cold_not_revert():
+    """A uniformly elevated tail (low bucket CV) is a cost regime change,
+    not a burst: the guardrail must cold re-profile (stale anchor and
+    reuse info dropped) rather than revert to a stale last-good."""
+    tuner, ids = _converged_tuner()
+    tuner._reprofile()
+    assert tuner.state == OnlineTuner.TRIAL
+    for i in range(200):
+        if tuner.state != OnlineTuner.TRIAL:
+            break
+        tuner.on_step(accessed_ids=ids(i), cost=300.0)   # flat 300x
+    assert tuner.guard_trips >= 1
+    assert tuner.state == OnlineTuner.PROFILE
+    assert not np.isfinite(tuner.last_good_cost), \
+        "cold reset must drop the stale cost anchor"
+
+
+# ---------------------------------------------------------------------------
+# HOLD guard: burst windows discarded, sustained runs escalate
+# ---------------------------------------------------------------------------
+
+
+def test_hold_discards_single_guard_window_then_escalates_sustained():
+    tuner, ids = _converged_tuner(drift_patience=3)
+    base = tuner.baseline_cost
+    retunes = tuner.retunes
+    # one guard-level window (100x >> guard_ratio x baseline): discarded
+    trips0 = tuner.guard_trips
+    i = 0
+    while tuner.guard_trips == trips0 and i < 100:
+        tuner.on_step(accessed_ids=ids(i), cost=100.0)
+        i += 1
+    assert tuner.guard_trips == trips0 + 1
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.baseline_cost == base, "a burst window must not baseline"
+    assert tuner.retunes == retunes, "a burst window must not re-profile"
+    # clean windows in between reset the strike counter
+    for _ in range(3 * tuner._win_target):
+        tuner.on_step(accessed_ids=ids(i), cost=base)
+        i += 1
+    assert tuner.state == OnlineTuner.HOLD and tuner._guard_strikes == 0
+    # sustained guard-level windows == regime change: cold re-profile
+    for _ in range(8 * tuner._win_target):
+        if tuner.state != OnlineTuner.HOLD:
+            break
+        tuner.on_step(accessed_ids=ids(i), cost=100.0)
+        i += 1
+    assert tuner.state == OnlineTuner.PROFILE
+    assert not np.isfinite(tuner.last_good_cost)
+
+
+def test_hold_baseline_floored_by_winner_trial_cost():
+    """One anomalously quiet first window must not arm a hair-trigger
+    drift detector: the baseline is floored by the winner's attested
+    trial cost (the mirror image of the _hold_skip transient discard)."""
+    tuner = OnlineTuner(8, default_period=4, trial_steps=8)
+    tuner.state = OnlineTuner.HOLD
+    tuner._sweep_cost = 10.0
+    tuner.baseline_cost = None
+    tuner._hold_skip = False
+    tuner._arm_window()
+    for i in range(tuner._win_target):
+        tuner.on_step(accessed_ids=np.array([i % 4]), cost=2.0)
+    assert tuner.baseline_cost == pytest.approx(10.0)
+    assert tuner.last_good_cost == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# variance-scaled trial windows
+# ---------------------------------------------------------------------------
+
+
+def _armed_trial(trial_steps, var_cv=0.3, var_max_factor=4):
+    tuner = OnlineTuner(8, default_period=4, trial_steps=trial_steps,
+                        guard_ratio=None, var_cv=var_cv,
+                        var_max_factor=var_max_factor)
+    tuner.state = OnlineTuner.TRIAL
+    tuner.candidates = np.array([4.0])
+    tuner.tried = []
+    tuner._trial_idx = 0
+    tuner._best_cost = np.inf
+    tuner._best_period = 4
+    tuner._stale = 0
+    tuner._arm_window()
+    return tuner
+
+
+def _alternating(i):
+    """Whole-period buckets alternate 9x / 1x: heavy-tailed (CV ~0.8)."""
+    return 9.0 if (i // 4) % 2 == 0 else 1.0
+
+
+def test_heavy_tailed_trial_window_extends_then_settles():
+    tuner = _armed_trial(trial_steps=16)
+    # noisy first window: buckets alternate -> CV > var_cv -> extend once
+    for i in range(16):
+        tuner.on_step(accessed_ids=np.array([i % 4]), cost=_alternating(i))
+    assert tuner.window_extensions == 1
+    assert tuner.state == OnlineTuner.TRIAL and not tuner.tried
+    # the restarted tail is calm: the trial completes at the doubled target
+    for i in range(16):
+        tuner.on_step(accessed_ids=np.array([i % 4]), cost=1.0)
+    assert len(tuner.tried) == 1
+    assert tuner.tried[0][1] == pytest.approx(1.0)
+    assert tuner.window_extensions == 1
+
+
+def test_variance_extension_capped_at_var_max_factor():
+    tuner = _armed_trial(trial_steps=16, var_max_factor=4)
+    for i in range(200):
+        if tuner.tried:
+            break
+        tuner.on_step(accessed_ids=np.array([i % 4]), cost=_alternating(i))
+    # 16 -> 32 -> 64 == var_max_factor x base, then the trial must finish
+    assert tuner.window_extensions == 2
+    assert len(tuner.tried) == 1
+
+
+def test_calm_trial_window_never_extends():
+    tuner = _armed_trial(trial_steps=16)
+    for i in range(16):
+        tuner.on_step(accessed_ids=np.array([i % 4]), cost=5.0)
+    assert tuner.window_extensions == 0
+    assert len(tuner.tried) == 1
+    assert tuner.tried[0][1] == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# warm re-tune candidate ordering
+# ---------------------------------------------------------------------------
+
+
+def test_warm_retune_explores_outward_from_previous_winner():
+    tuner, _ = _converged_tuner()
+    hist = tuner.collector.histogram()
+    tuner._launch_trials(hist)
+    cand = np.asarray(tuner.candidates, float)
+    assert len(cand) > 1
+    dist = np.abs(cand - float(tuner.last_good_period))
+    assert (np.diff(dist) >= 0).all(), \
+        "warm sweep must be ordered nearest-first around the last winner"
+    assert cand[0] == pytest.approx(tuner.last_good_period, abs=2.0)
+
+
+def test_cold_retune_reverts_to_shortest_first_order():
+    tuner, _ = _converged_tuner()
+    hist = tuner.collector.histogram()
+    tuner._warm_next = False                 # what a cold reset sets
+    tuner._launch_trials(hist)
+    cand = np.asarray(tuner.candidates, float)
+    assert (np.diff(cand) > 0).all(), \
+        "cold sweep must re-walk the ladder shortest-first"
+    assert tuner._warm_next, "the cold order is consumed one-shot"
+
+
+# ---------------------------------------------------------------------------
+# defenses are inert on clean stationary traffic
+# ---------------------------------------------------------------------------
+
+
+def test_defenses_change_nothing_on_stationary_workload():
+    def drive(**kw):
+        params = dict(default_period=2, profile_steps=32, trial_steps=16,
+                      horizon_steps=64, bin_width=1, patience=3)
+        params.update(kw)
+        tuner = OnlineTuner(64, **params)
+        ids = lambda t: (np.array([0]) if t % 4 == 0
+                         else np.array([1 + (t % 63)]))
+        for t in range(400):
+            tuner.on_step(accessed_ids=ids(t),
+                          cost=abs(tuner.period - 8) + 1.0)
+        return tuner
+
+    on = drive()
+    off = drive(guard_ratio=None, var_cv=None, warm_start=False)
+    assert on.period == off.period == 8
+    assert on.retunes == off.retunes == 1
+    assert on.guard_trips == 0 and on.window_extensions == 0
+
+
+# ---------------------------------------------------------------------------
+# end to end: a hostile stream through the serving scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_flash_crowd_stream_through_scheduler_stays_stable():
+    """Flash crowds through the real TrafficScheduler -> TrafficMonitor ->
+    OnlineTuner loop: the tuner must not churn (bounded re-tunes), must
+    keep a sane period, and every logged cost must be finite."""
+    from repro.memtier import SharedPagedPools, TierConfig, TieringManager
+    from repro.serve.sched import TrafficMonitor, TrafficScheduler
+
+    specs = flash_crowd_stream(400, 0.08, {"random": 0.6, "sink": 0.4},
+                               spike_factor=6.0, spike_every=120,
+                               spike_len=10, prompt_len=(16, 48),
+                               new_tokens=(40, 100), seed=3)
+    pools = SharedPagedPools.create(128, 16)
+    mgr = TieringManager(128, TierConfig(page_size=16, hbm_pages=16,
+                                         period_steps=8))
+    tuner = OnlineTuner(128, default_period=8, drift_ratio=1.5,
+                        drift_patience=3)
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr, tuner),
+                             page_size=16, max_active=6)
+    for _ in range(400):
+        sched.step()
+    assert sched.completed > 0
+    assert tuner.retunes <= 3, "flash crowds must not churn the tuner"
+    assert tuner.period >= 1
+    assert all(np.isfinite(c) for c in tuner.cost_log)

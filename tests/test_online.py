@@ -326,3 +326,60 @@ def test_monitored_generate_on_mass_hook():
                                     on_mass=lambda i, m: seen.append((i, m)))
     assert [i for i, _ in seen] == list(range(mass.shape[0]))
     np.testing.assert_array_equal(np.stack([m for _, m in seen]), mass)
+
+
+# ---------------------------------------------------------------------------
+# cost-accounting regressions (adversarial-traffic hardening PR)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_log_is_uniformly_per_step():
+    """The cost log must hold per-step costs: raw observation costs would
+    mix per-token and per-macro magnitudes whenever dt varies."""
+    tuner = OnlineTuner(8, default_period=4)
+    tuner.on_step(accessed_ids=np.array([0]), cost=3.0, dt=1)
+    tuner.on_step(accessed_ids=np.array([1]), cost=8.0, dt=4)
+    assert list(tuner.cost_log)[-2:] == [3.0, 2.0]
+
+
+def test_trial_tail_straddle_prorated_under_macro_dt():
+    """A macro observation straddling the head/tail boundary must charge
+    only its tail overlap to the tail mean (charging the whole macro cost
+    biases the ranking for windows that are not a multiple of dt)."""
+    tuner = OnlineTuner(8, default_period=5, trial_steps=10,
+                        guard_ratio=None, var_cv=None)
+    tuner.state = OnlineTuner.TRIAL
+    tuner.candidates = np.array([5.0])
+    tuner.tried = []
+    tuner._trial_idx = 0
+    tuner._arm_window()
+    assert tuner._win_target == 10 and tuner._tail_begin == 5
+    # obs spans [0,4): head only.  obs spans [4,8): 3 of 4 steps in the
+    # tail.  obs spans [8,12): all 4 in the tail, window done.
+    tuner.on_step(accessed_ids=np.array([0]), cost=100.0, dt=4)
+    tuner.on_step(accessed_ids=np.array([1]), cost=8.0, dt=4)
+    tuner.on_step(accessed_ids=np.array([2]), cost=4.0, dt=4)
+    assert len(tuner.tried) == 1
+    # tail cost = 8 * (3/4) + 4, over 7 tail steps
+    assert tuner.tried[0][1] == pytest.approx((8.0 * 0.75 + 4.0) / 7.0)
+
+
+def test_clean_period_switch_does_not_fake_drift():
+    """The first HOLD window inherits the residency transient from the
+    period switch; baselining it makes every later (clean, cheaper) window
+    read as a fake sustained improvement and re-profiles a perfectly
+    stable workload.  The tuner must skip that window before baselining."""
+    tuner = OnlineTuner(64, default_period=4, profile_steps=40,
+                        trial_steps=32, horizon_steps=44, bin_width=1)
+    ids = lambda t: np.array([0]) if t % 20 == 0 else np.array([1 + (t % 63)])
+    hold_at = None
+    for t in range(2000):
+        if hold_at is None and tuner.state == OnlineTuner.HOLD:
+            hold_at = t
+        # a 15-step cost transient right after the winning period switch
+        c = 30.0 if hold_at is not None and t - hold_at < 15 else 1.0
+        tuner.on_step(accessed_ids=ids(t), cost=c)
+    assert tuner.period == 20
+    assert tuner.state == OnlineTuner.HOLD
+    assert tuner.retunes == 1, "a clean switch must not fake drift/improve"
+    assert tuner.baseline_cost == pytest.approx(1.0)
