@@ -74,6 +74,22 @@ def smoke() -> None:
         "poisoned TRIAL sweep must abort and revert to the last " \
         f"attested period (got {pt})"
 
+    # the flight recorder must have captured the hostile run: a JSONL
+    # event log with the full tuner decision timeline, replayable by
+    # ``python -m repro.obs.report`` (uploaded as a CI artifact)
+    from repro import obs
+    from repro.obs import report as obs_report
+    assert ho["metrics"]["schema"] == obs.SCHEMA, \
+        f"benchmark metrics schema drifted: {ho['metrics'].get('schema')}"
+    events = obs.read_jsonl(ho["events_jsonl"])
+    transitions = [e for e in events if e["type"] == "tuner.transition"]
+    assert transitions, "hostile event log carries no tuner transitions"
+    trace = obs_report.decision_trace(events)
+    assert any("->" in ln for ln in trace), \
+        "decision trace failed to reconstruct the tuner timeline"
+    print(f"smoke_obs,0,events={len(events) - 1};"
+          f"transitions={len(transitions)};trace_lines={len(trace)}")
+
     # serving throughput: the macro-step hot loop must not regress below
     # the per-token paged path, with the four-way bit-parity bar intact
     # (results land in BENCH_serving.json for cross-PR tracking)
@@ -89,6 +105,12 @@ def smoke() -> None:
             >= sp["modes"]["paged"]["tokens_per_sec"]), \
         "macro-step decode must be at least as fast as the per-token " \
         f"paged path (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+    ov = sp["telemetry_overhead"]
+    print(f"smoke_telemetry,0,overhead_ratio={ov['ratio']:.3f};"
+          f"enabled_tok_s={ov['enabled_tok_s']:.0f}")
+    assert ov["ratio"] >= 0.97, \
+        "telemetry-enabled macro-loop throughput must stay within 3% of " \
+        f"disabled (got {ov['ratio']:.3f})"
 
 
 def main(argv=None) -> None:

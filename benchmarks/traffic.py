@@ -41,7 +41,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from benchmarks.common import save_json
+from benchmarks.common import out_dir, save_json
+from repro import obs
 from repro.core import OnlineTuner, shifting_mix_stream
 from repro.memtier import SharedPagedPools, TierConfig, TieringManager
 from repro.serve.sched import TrafficMonitor, TrafficScheduler
@@ -223,12 +224,18 @@ def hostile(quick: bool = False) -> Dict:
     steps = 4 * phase
     specs = _hostile_stream(phase)
 
+    # a fresh flight recorder isolates the online run's event stream: the
+    # JSONL written below is the full tuner decision timeline of exactly
+    # this trajectory (fixed-period replays never pollute it)
+    rec = obs.install(obs.Recorder())
     # shorter profile/trial windows than run(): the tuner must be settled
     # well before the first phase window closes, and the variance-scaled
     # extension recovers the averaging when a phase is genuinely noisy
     tuner = OnlineTuner(N_LOGICAL, default_period=8, profile_steps=48,
                         trial_steps=24, drift_ratio=1.5, drift_patience=3)
     sched, tuner, online_traj = _trajectory(specs, steps, tuner=tuner)
+    events_jsonl = obs.write_jsonl(out_dir() / "hostile_events.jsonl", rec)
+    metrics = {"schema": obs.SCHEMA, **rec.summary()}
     fixed_traj = {p: _trajectory(specs, steps, period=p)[2]
                   for p in HOSTILE_FIXED}
 
@@ -257,6 +264,11 @@ def hostile(quick: bool = False) -> Dict:
                   "window_extensions": tuner.window_extensions,
                   "period_history": tuner.history},
         "poisoned_trial": _poisoned_trial_revert(),
+        # the flight-recorder view of the same online run (see
+        # docs/observability.md for the schema): replay the JSONL with
+        # ``python -m repro.obs.report`` for the decision trace
+        "metrics": metrics,
+        "events_jsonl": str(events_jsonl),
     }
     save_json("BENCH_hostile", out)
     return out
@@ -357,7 +369,12 @@ def serving_perf(quick: bool = False) -> Dict:
     loop exists to raise); latency percentiles are per ``step()`` call
     (one token for the per-token path, one movement period for macro).
     The parity field pins the tentpole bar: every mode's wave-2 streams
-    bit-identical to per-request ``generate``."""
+    bit-identical to per-request ``generate``.
+
+    Also measures the flight recorder's cost on the macro hot loop:
+    alternating telemetry-enabled/disabled waves over one warmed batcher,
+    best-of-3 per mode (the ``telemetry_overhead`` field; the CI bar is
+    enabled throughput within 3% of disabled)."""
     import jax
     import jax.numpy as jnp
 
@@ -368,6 +385,7 @@ def serving_perf(quick: bool = False) -> Dict:
 
     cfg = C.reduced("gemma3-12b")
     params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    rec = obs.install(obs.Recorder())
     rng = np.random.default_rng(0)
     n_req = 4 if quick else 8
     page, max_len, max_active = 4, 64, 4
@@ -439,6 +457,27 @@ def serving_perf(quick: bool = False) -> Dict:
         parity[mode] = all(got.get(n_req + i) == refs[i]
                            for i in range(n_req))
 
+    # telemetry overhead on the macro hot loop: one warmed batcher serves
+    # alternating enabled/disabled waves (interleaved so machine drift
+    # hits both modes alike), best-of-3 per mode
+    b = build("macro")
+    submit_wave(b, 0)
+    drive(b)
+    best = {True: 0.0, False: 0.0}
+    wave = 1
+    for _ in range(3):
+        for enabled in (True, False):
+            rec.enabled = enabled
+            submit_wave(b, wave)
+            wave += 1
+            t0 = time.perf_counter()
+            tokens, _ = drive(b)
+            best[enabled] = max(best[enabled],
+                                tokens / (time.perf_counter() - t0))
+    rec.enabled = True
+    overhead = {"enabled_tok_s": best[True], "disabled_tok_s": best[False],
+                "ratio": best[True] / best[False]}
+
     out = {
         "n_requests": n_req,
         "max_active": max_active,
@@ -448,6 +487,10 @@ def serving_perf(quick: bool = False) -> Dict:
                                        / results["paged"]["tokens_per_sec"]),
         "parity_vs_generate": parity,
         "token_identical_all_modes": all(parity.values()),
+        "telemetry_overhead": overhead,
+        # the flight-recorder metrics of this whole benchmark run (see
+        # docs/observability.md for the schema)
+        "metrics": {"schema": obs.SCHEMA, **rec.summary()},
     }
     save_json("BENCH_serving", out)
     return out
@@ -463,6 +506,10 @@ def _print_serving(sp: Dict) -> None:
           f"{sp['speedup_macro_vs_per_token']:.2f}x; "
           f"token-identical (all modes vs generate): "
           f"{sp['token_identical_all_modes']}")
+    ov = sp["telemetry_overhead"]
+    print(f"telemetry overhead: enabled {ov['enabled_tok_s']:.0f} tok/s vs "
+          f"disabled {ov['disabled_tok_s']:.0f} "
+          f"(ratio {ov['ratio']:.3f})")
 
 
 if __name__ == "__main__":
@@ -482,6 +529,9 @@ if __name__ == "__main__":
         assert sp["speedup_macro_vs_per_token"] >= 1.3, \
             "macro-step decode must beat the per-token paged path by " \
             f">= 1.3x (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+        assert sp["telemetry_overhead"]["ratio"] >= 0.97, \
+            "telemetry-enabled macro throughput must stay within 3% of " \
+            f"disabled (got {sp['telemetry_overhead']['ratio']:.3f})"
         ho = hostile(quick=True)
         _print_hostile(ho)
         assert ho["max_regret"] <= 1.15, \

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Event-taxonomy checker (CI): instrumentation and docs cannot drift.
+
+Cross-checks three views of the flight-recorder event taxonomy:
+
+  1. the registry -- ``src/repro/obs/events.py`` (loaded standalone, so
+     this runs in the dependency-free docs CI job);
+  2. the emit sites -- every ``emit("<type>", ...)`` string literal under
+     ``src/`` must name a registered type (the Recorder also enforces
+     this at runtime; this catches sites tests never execute);
+  3. the docs -- every registered type must appear in the taxonomy table
+     of ``docs/observability.md``, and every ``type`` the table lists
+     must still be registered.
+
+Also verifies each emit site's keyword arguments against the registered
+field tuple, and that no event field shadows the ``seq``/``t``/``type``
+envelope.
+
+    python scripts/check_events.py [root]
+"""
+from __future__ import annotations
+
+import ast
+import importlib.util
+import pathlib
+import re
+import sys
+
+DOC = "docs/observability.md"
+DOC_TYPE = re.compile(r"^\|\s*`([a-z_]+\.[a-z_]+)`\s*\|", re.M)
+
+
+def load_events(root: pathlib.Path):
+    """Load the registry without importing the repro package (the docs CI
+    job has no numpy/jax installed)."""
+    path = root / "src" / "repro" / "obs" / "events.py"
+    spec = importlib.util.spec_from_file_location("_obs_events", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.EVENTS, mod.RESERVED_FIELDS
+
+
+def emit_sites(root: pathlib.Path):
+    """Yield (file, lineno, etype, kwarg_names) for every ``X.emit("...")``
+    call with a string-literal first argument under src/."""
+    for py in sorted((root / "src").rglob("*.py")):
+        tree = ast.parse(py.read_text(), filename=str(py))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "emit"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            kwargs = tuple(k.arg for k in node.keywords if k.arg)
+            yield (py.relative_to(root), node.lineno,
+                   node.args[0].value, kwargs)
+
+
+def check(root: pathlib.Path) -> int:
+    errors = []
+    events, reserved = load_events(root)
+
+    for name, ev in events.items():
+        for f in ev.fields:
+            if f in reserved:
+                errors.append(f"registry: {name} field {f!r} shadows the "
+                              "envelope")
+
+    # -- emit sites vs registry ---------------------------------------------
+    n_sites = 0
+    emitted = set()
+    for fname, lineno, etype, kwargs in emit_sites(root):
+        n_sites += 1
+        emitted.add(etype)
+        if etype not in events:
+            errors.append(f"{fname}:{lineno}: emit of unregistered event "
+                          f"type {etype!r}")
+            continue
+        unknown = set(kwargs) - set(events[etype].fields)
+        if unknown:
+            errors.append(f"{fname}:{lineno}: {etype} emitted with "
+                          f"unregistered field(s) {sorted(unknown)}")
+    # metrics.* records are written by the exporters, never emit()ed
+    never = [n for n in events
+             if n not in emitted and events[n].domain != "metrics"]
+    if never:
+        errors.append(f"registered but never emitted in src/: {never} "
+                      "(drop them or instrument)")
+
+    # -- registry vs docs table ---------------------------------------------
+    doc = (root / DOC).read_text()
+    documented = set(DOC_TYPE.findall(doc))
+    for name in events:
+        if name not in documented:
+            errors.append(f"{DOC}: registered event {name!r} missing from "
+                          "the taxonomy table")
+    for name in documented:
+        if name not in events:
+            errors.append(f"{DOC}: taxonomy table lists {name!r}, which is "
+                          "not registered in repro/obs/events.py")
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {n_sites} emit sites against {len(events)} registered "
+          f"event types and {len(documented)} documented: "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else pathlib.Path(__file__).resolve().parent.parent
+    raise SystemExit(check(root))

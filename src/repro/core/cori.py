@@ -46,6 +46,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.reuse import ReuseHistogram, StreamingReuseCollector
+from repro.obs import telemetry as _obs
 
 __all__ = [
     "dominant_reuse",
@@ -249,6 +250,8 @@ class OnlineTuner:
 
     PROFILE, TRIAL, HOLD = "profile", "trial", "hold"
 
+    _obs_count = 0          # process-wide id counter for telemetry streams
+
     def __init__(self, n_pages: int, default_period: int = 8,
                  profile_steps: int = 64, trial_steps: int = 32,
                  horizon_steps: Optional[int] = None,
@@ -305,9 +308,16 @@ class OnlineTuner:
         self.last_good_cost = float("inf")
         self.guard_trips = 0        # guard aborts + discarded HOLD windows
         self.window_extensions = 0  # variance-driven trial-window doublings
-        # recent per-step costs (bounded: this object lives in a serving loop)
+        # public rolling window of recent PER-STEP costs (bounded; read by
+        # tests and benchmarks for cost-level asserts).  The flight
+        # recorder's "tuner.cost_per_step" histogram sees the same stream
+        # but keeps full-run quantiles in O(1) memory -- use the deque for
+        # exact recent values, the histogram for distributional summaries.
         self.cost_log: "collections.deque[float]" = collections.deque(
             maxlen=cost_log_len)
+        OnlineTuner._obs_count += 1
+        #: short id tagging this instance's telemetry events ("t1", ...)
+        self.obs_id = f"t{OnlineTuner._obs_count}"
         self._drift_strikes = 0
         self._improve_strikes = 0
         self._guard_strikes = 0
@@ -369,6 +379,8 @@ class OnlineTuner:
         # the log is uniformly PER-STEP: raw observation costs would mix
         # per-token and per-macro magnitudes whenever dt varies
         self.cost_log.append(per_step)
+        if (r := _obs.RECORDER).enabled:
+            r.observe("tuner.cost_per_step", per_step)
         self.step += dt
         if self.state == self.PROFILE:
             if self._win_steps >= self.profile_steps:
@@ -487,11 +499,18 @@ class OnlineTuner:
         the stale anchor (and reuse info) must go -- cold re-profile."""
         cv = self._tail_bucket_cv()
         spiky_above = self.var_cv if self.var_cv is not None else 0.5
-        if not np.isfinite(cv) or cv > spiky_above:
+        burst = bool(not np.isfinite(cv) or cv > spiky_above)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.guard", tuner=self.obs_id, step=self.step,
+                   where="trial", verdict="burst" if burst else "regime",
+                   cv=float(cv), ref=float(self._guard_ref()),
+                   cost=self._tail_cost / max(1, self._tail_steps))
+            r.count("tuner.guard_trips")
+        if burst:
             self._abort_sweep()
         else:
             self.guard_trips += 1
-            self._reprofile(cold=True)
+            self._reprofile(cold=True, reason="guard-regime")
             self._arm_window()
 
     def _abort_sweep(self) -> None:
@@ -502,7 +521,15 @@ class OnlineTuner:
         fall back to HOLD.  A sustained spike then re-profiles through the
         HOLD guard once its patience runs out."""
         self.guard_trips += 1
-        if np.isfinite(self._best_cost):
+        adopted = bool(np.isfinite(self._best_cost))
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.transition", tuner=self.obs_id, step=self.step,
+                   frm=self.state, to=self.HOLD, reason="guard-abort",
+                   period=int(self._best_period if adopted
+                              else self.last_good_period),
+                   detail=("adopt ranked winner" if adopted
+                           else "revert to last-good"))
+        if adopted:
             # the sweep still produced a cleanly ranked winner: adopting it
             # completes the cycle, so it counts as a re-tune
             self._set_period(self._best_period)
@@ -542,6 +569,11 @@ class OnlineTuner:
         head (warmup) and the ranking tail restarts, so the burst that
         triggered the extension cannot de-noise into the ranking."""
         self.window_extensions += 1
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.extend", tuner=self.obs_id, step=self.step,
+                   cv=float(self._tail_bucket_cv()),
+                   win_target=int(self._win_target * 2))
+            r.count("tuner.window_extensions")
         self._tail_begin = self._win_target
         self._win_target += self._win_target   # stays a period multiple
         self._tail_cost = 0.0
@@ -557,6 +589,10 @@ class OnlineTuner:
         p = max(1, int(round(period)))
         if p != self.period:
             self.history.append((self.step, p))
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.period", tuner=self.obs_id, step=self.step,
+                       period=p, prev=self.period)
+                r.gauge(f"tuner.period.{self.obs_id}", p)
         self.period = p
 
     def _arm_window(self) -> None:
@@ -579,11 +615,15 @@ class OnlineTuner:
         if hist.num_bins == 0:
             # nothing re-accessed yet: keep the default period, try again
             # after another profile window
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.profile_extend", tuner=self.obs_id,
+                       step=self.step)
             self._arm_window()
             return
-        self._launch_trials(hist)
+        self._launch_trials(hist, reason="profile-complete")
 
-    def _launch_trials(self, hist: ReuseHistogram) -> None:
+    def _launch_trials(self, hist: ReuseHistogram,
+                       reason: str = "profile-complete") -> None:
         self.dominant_reuse = dominant_reuse(hist)
         ladder = candidate_periods(self.dominant_reuse,
                                    float(self.horizon_steps),
@@ -611,6 +651,12 @@ class OnlineTuner:
         self._best_cost = np.inf
         self._best_period = self.period
         self._stale = 0
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.transition", tuner=self.obs_id, step=self.step,
+                   frm=self.state, to=self.TRIAL, reason=reason,
+                   period=int(max(1, round(cand[0]))),
+                   detail=f"ladder {[int(round(c)) for c in cand]}, "
+                          f"DR={self.dominant_reuse:.1f}")
         self.state = self.TRIAL
         self._set_period(self.candidates[0])
         self._arm_window()
@@ -620,7 +666,8 @@ class OnlineTuner:
         if not np.isfinite(cost):
             cost = float("inf")
         self.tried.append((float(self.period), cost))
-        if cost < self._best_cost * (1.0 - self.rel_tol):
+        improved = cost < self._best_cost * (1.0 - self.rel_tol)
+        if improved:
             self._best_cost, self._best_period = cost, self.period
             self._stale = 0
         else:
@@ -630,6 +677,21 @@ class OnlineTuner:
                 or self._trial_idx >= len(self.candidates)
                 or (self.max_trials is not None
                     and self._trial_idx >= self.max_trials))
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.trial", tuner=self.obs_id, step=self.step,
+                   period=self.period, cost=cost,
+                   best_period=int(self._best_period),
+                   best_cost=float(self._best_cost), stale=self._stale,
+                   improved=improved)
+            r.observe("tuner.trial_cost", cost)
+            if done:
+                r.emit("tuner.transition", tuner=self.obs_id,
+                       step=self.step, frm=self.state, to=self.HOLD,
+                       reason="sweep-complete",
+                       period=int(self._best_period),
+                       detail=f"{self._trial_idx} trials, winner "
+                              f"p={int(self._best_period)}")
+                r.count("tuner.retunes")
         if done:
             self.state = self.HOLD
             self.baseline_cost = None
@@ -658,6 +720,11 @@ class OnlineTuner:
             # period-switch transient window: measure nothing from it (a
             # clean switch must not fake drift via a polluted baseline)
             self._hold_skip = False
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.hold_window", tuner=self.obs_id,
+                       step=self.step, kind="skip-transient",
+                       cost=self._win_cost / max(1, self._win_steps),
+                       baseline=self.baseline_cost, strikes=0)
             self._arm_window()
             return
         cost = self._win_cost / max(1, self._win_steps)
@@ -673,12 +740,25 @@ class OnlineTuner:
             self._guard_strikes += 1
             self._drift_strikes = 0
             self._improve_strikes = 0
-            if self._guard_strikes >= self.drift_patience:
-                self._reprofile(cold=True)
+            escalate = self._guard_strikes >= self.drift_patience
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.guard", tuner=self.obs_id, step=self.step,
+                       where="hold",
+                       verdict="escalate" if escalate else "discard",
+                       cv=float("nan"), ref=float(ref), cost=cost)
+                r.emit("tuner.hold_window", tuner=self.obs_id,
+                       step=self.step, kind="discard-guard", cost=cost,
+                       baseline=self.baseline_cost,
+                       strikes=self._guard_strikes)
+                r.count("tuner.guard_trips")
+            if escalate:
+                self._reprofile(cold=True, reason="guard-escalate")
             self._arm_window()
             return
         self._guard_strikes = 0
         if self.baseline_cost is None:
+            floored = (self._sweep_cost is not None
+                       and self._sweep_cost > cost)
             if self._sweep_cost is not None:
                 # the first clean window after a sweep can *undershoot* the
                 # regime's steady cost (residency is still settling), and a
@@ -688,6 +768,9 @@ class OnlineTuner:
                 # trial cost so one quiet window cannot set the reference.
                 cost = max(cost, self._sweep_cost)
             self.baseline_cost = cost
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.baseline", tuner=self.obs_id, step=self.step,
+                       cost=cost, floored=floored)
             if np.isfinite(cost):
                 self.last_good_period = self.period
                 self.last_good_cost = cost
@@ -696,29 +779,43 @@ class OnlineTuner:
                 # just re-anchored the guardrail, so re-rank the ladder now
                 # (warm -- explores outward from the adopted fallback)
                 self._resweep_pending = False
-                self._reprofile()
+                self._reprofile(reason="resweep")
         elif cost > self.drift_ratio * max(self.baseline_cost, 1e-12):
             self._drift_strikes += 1
             self._improve_strikes = 0
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.hold_window", tuner=self.obs_id,
+                       step=self.step, kind="drift-strike", cost=cost,
+                       baseline=self.baseline_cost,
+                       strikes=self._drift_strikes)
             if self._drift_strikes >= self.drift_patience:
                 # sustained regression == workload phase change: stale
                 # reuse info is worse than none
-                self._reprofile()
+                self._reprofile(reason="drift")
         elif (self.improve_ratio is not None
               and cost * self.improve_ratio < self.baseline_cost):
             self._improve_strikes += 1
             self._drift_strikes = 0
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.hold_window", tuner=self.obs_id,
+                       step=self.step, kind="improve-strike", cost=cost,
+                       baseline=self.baseline_cost,
+                       strikes=self._improve_strikes)
             if self._improve_strikes >= self.improve_patience:
                 # sustained *improvement* is a phase change too: the new,
                 # cheaper mix may admit an even better period than the one
                 # tuned against the old mix
-                self._reprofile()
+                self._reprofile(reason="improve")
         else:
             self._drift_strikes = 0
             self._improve_strikes = 0
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tuner.hold_window", tuner=self.obs_id,
+                       step=self.step, kind="ok", cost=cost,
+                       baseline=self.baseline_cost, strikes=0)
         self._arm_window()
 
-    def _reprofile(self, cold: bool = False) -> None:
+    def _reprofile(self, cold: bool = False, reason: str = "manual") -> None:
         self._drift_strikes = 0
         self._improve_strikes = 0
         self._guard_strikes = 0
@@ -732,7 +829,7 @@ class OnlineTuner:
             # fresher histogram).
             hist = self.collector.histogram()
             if hist.num_bins > 0:
-                self._launch_trials(hist)
+                self._launch_trials(hist, reason=f"warm-{reason}")
                 return
         # cold reset (guard-strike escalation, or nothing collected yet):
         # stale reuse info is worse than none.  A drift-triggered WARM
@@ -744,6 +841,11 @@ class OnlineTuner:
         self.last_good_cost = float("inf")
         self._warm_next = False
         self.collector.reset()
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.transition", tuner=self.obs_id, step=self.step,
+                   frm=self.state, to=self.PROFILE,
+                   reason=f"cold-{reason}", period=self.period,
+                   detail="reuse collector reset")
         self.state = self.PROFILE
 
     # -- multi-request traffic hooks -----------------------------------------

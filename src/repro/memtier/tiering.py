@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import cori, reuse
 from repro.kernels import ops
+from repro.obs import telemetry as _obs
 
 __all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools",
            "bucket_pages", "write_pages_batched"]
@@ -272,6 +273,10 @@ class SharedPagedPools:
         self.owner_of[gids] = owner
         self.allocated_pages += n_pages
         self.peak_allocated = max(self.peak_allocated, self.allocated_pages)
+        if (r := _obs.RECORDER).enabled:
+            r.count("pool.alloc_pages", n_pages)
+            r.gauge("pool.allocated_frac",
+                    self.allocated_pages / self.n_logical)
         return gids
 
     def free(self, gids: np.ndarray) -> None:
@@ -284,6 +289,12 @@ class SharedPagedPools:
         self.owner_of[gids] = -1
         self._free_ids.extend(sorted(gids.tolist(), reverse=True))
         self.allocated_pages -= int(gids.size)
+        if (r := _obs.RECORDER).enabled:
+            r.count("pool.free_pages", int(gids.size))
+            r.gauge("pool.allocated_frac",
+                    self.allocated_pages / self.n_logical)
+            r.gauge("pool.hbm_resident_frac",
+                    float((self.page_of_slot >= 0).sum()) / self.hbm_pages)
 
     # -- physical data path --------------------------------------------------
     def write_page(self, gid: int, k_page, v_page) -> None:
@@ -364,6 +375,10 @@ class SharedPagedPools:
         them as misses.  Raises if `gids` alone exceed the slot pool."""
         slots, missing = self._place(gids)
         self.migrate_slots(slots, missing)
+        if missing.size and (r := _obs.RECORDER).enabled:
+            r.count("pool.fetch_misses", int(missing.size))
+            r.gauge("pool.hbm_resident_frac",
+                    float((self.page_of_slot >= 0).sum()) / self.hbm_pages)
         return int(missing.size)
 
     def assign_slots(self, gids: np.ndarray) -> np.ndarray:
@@ -421,6 +436,8 @@ def write_pages_batched(kv, ks_new, vs_new, gids, slots):
 class TieringManager:
     """Periodic page scheduler over a PagedPools working set."""
 
+    _obs_count = 0          # process-wide id counter for telemetry streams
+
     def __init__(self, n_logical: int, cfg: TierConfig,
                  access_log_len: int = 65536):
         self.cfg = cfg
@@ -446,6 +463,9 @@ class TieringManager:
         self.data_moved_pages = 0
         self.hits = 0
         self.misses = 0
+        TieringManager._obs_count += 1
+        #: short id tagging this instance's telemetry events ("m1", ...)
+        self.obs_id = f"m{TieringManager._obs_count}"
 
     def set_period(self, period_steps: int) -> None:
         """Change the tiering period live (the online-Cori control knob)."""
@@ -566,6 +586,12 @@ class TieringManager:
         # data (the host copy is write-through, dropping a slot is free)
         self.data_moved_pages += 2 * int(n_mig)
         self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tier.move", manager=self.obs_id, step=self.step,
+                   period=self.period, promoted=int(n_mig),
+                   evicted=int(len(evict)), pages_moved=2 * int(n_mig),
+                   cost=float(n_mig * cfg.mig_cost + cfg.wakeup_cost))
+            r.count("tier.pages_moved", 2 * int(n_mig))
         return pools
 
     def maybe_tier_symbolic(self, resident: np.ndarray,
@@ -583,6 +609,13 @@ class TieringManager:
         self.migrations += n_mig
         self.data_moved_pages += 2 * n_mig
         self.modeled_time += n_mig * self.cfg.mig_cost + self.cfg.wakeup_cost
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tier.move", manager=self.obs_id, step=self.step,
+                   period=self.period, promoted=int(n_mig),
+                   evicted=int(len(evict)), pages_moved=2 * int(n_mig),
+                   cost=float(n_mig * self.cfg.mig_cost
+                              + self.cfg.wakeup_cost))
+            r.count("tier.pages_moved", 2 * int(n_mig))
         resident[evict] = False
         resident[bring] = True
         return True

@@ -1,0 +1,37 @@
+"""Flight recorder: structured tracing + metrics for the whole stack.
+
+``repro.obs`` is the observability substrate the tuner, tiering manager,
+paged pools and serving scheduler report into.  See
+``docs/observability.md`` for the event taxonomy and exporter formats.
+
+Hot-path idiom (what every instrumented module does)::
+
+    from repro import obs
+    ...
+    if (r := obs.RECORDER).enabled:
+        r.emit("tuner.transition", tuner=self._obs_id, step=step, ...)
+
+Reading ``RECORDER`` through the module attribute (never ``from repro.obs
+import RECORDER``) is load-bearing: ``install()`` rebinds the attribute,
+so a fresh recorder takes effect everywhere at once.
+"""
+from repro.obs import telemetry as telemetry
+from repro.obs.events import EVENTS, Event, RESERVED_FIELDS
+from repro.obs.export import (SCHEMA, perfetto_trace, read_jsonl,
+                              write_jsonl, write_perfetto)
+from repro.obs.telemetry import Histogram, Recorder, get, install
+
+__all__ = [
+    "EVENTS", "Event", "RESERVED_FIELDS",
+    "Histogram", "Recorder", "RECORDER", "install", "get",
+    "SCHEMA", "write_jsonl", "read_jsonl", "perfetto_trace",
+    "write_perfetto",
+]
+
+
+def __getattr__(name):
+    # RECORDER must stay live across install(): delegate to telemetry's
+    # module attribute instead of snapshotting it at import time.
+    if name == "RECORDER":
+        return telemetry.RECORDER
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,115 @@
+"""Event taxonomy: the closed registry of flight-recorder event types.
+
+Every ``Recorder.emit`` call site in ``src/`` must name a type registered
+here, and every registered type must appear in the taxonomy table of
+``docs/observability.md`` -- both directions are enforced by
+``scripts/check_events.py`` in CI, so instrumentation and docs cannot
+drift apart.  ``Recorder.emit`` itself rejects unregistered types at
+runtime.
+
+This module is deliberately stdlib-only (no numpy/jax): the CI docs job
+loads it standalone to cross-check the docs table without installing the
+runtime dependencies.
+
+Field-name contract: ``seq``, ``t`` and ``type`` are reserved (the
+envelope the Recorder wraps every event in); event fields must not reuse
+them so the JSONL export can stay flat.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+__all__ = ["Event", "EVENTS", "RESERVED_FIELDS"]
+
+RESERVED_FIELDS = ("seq", "t", "type")
+
+
+class Event(NamedTuple):
+    """One registered event type: its field names and what it records."""
+    name: str
+    domain: str                 # tuner | tier | pool | serve | ft | meta
+    fields: Tuple[str, ...]
+    description: str
+
+
+def _ev(name: str, fields: Tuple[str, ...], description: str) -> Event:
+    domain = name.split(".", 1)[0]
+    for f in fields:
+        if f in RESERVED_FIELDS:
+            raise ValueError(f"{name}: field {f!r} shadows the envelope")
+    return Event(name, domain, fields, description)
+
+
+_ALL = [
+    # -- tuner: the OnlineTuner decision path (step domain) ------------------
+    _ev("tuner.transition",
+        ("tuner", "step", "frm", "to", "reason", "period", "detail"),
+        "OnlineTuner state change (PROFILE/TRIAL/HOLD) with the decision "
+        "reason -- profile-complete, sweep-complete, warm-/cold- re-tune "
+        "cause, guard abort/escalation"),
+    _ev("tuner.period",
+        ("tuner", "step", "period", "prev"),
+        "the live tiering period changed (trial candidate switch, sweep "
+        "winner adoption, guard revert)"),
+    _ev("tuner.trial",
+        ("tuner", "step", "period", "cost", "best_period", "best_cost",
+         "stale", "improved"),
+        "one TRIAL candidate finished: tail-mean per-step cost and its "
+        "effect on the sweep ranking"),
+    _ev("tuner.guard",
+        ("tuner", "step", "where", "verdict", "cv", "ref", "cost"),
+        "cost-spike guardrail trip: TRIAL burst-vs-regime verdict, or a "
+        "discarded guard-level HOLD window"),
+    _ev("tuner.extend",
+        ("tuner", "step", "cv", "win_target"),
+        "variance-scaled trial window doubled (tail bucket CV above "
+        "var_cv); the tail restarts"),
+    _ev("tuner.baseline",
+        ("tuner", "step", "cost", "floored"),
+        "HOLD baseline (re-)attested from a clean window; floored=True "
+        "when the sweep winner's trial cost raised it"),
+    _ev("tuner.hold_window",
+        ("tuner", "step", "kind", "cost", "baseline", "strikes"),
+        "one HOLD measurement window closed: skip-transient, "
+        "discard-guard, drift-strike, improve-strike or ok"),
+    _ev("tuner.profile_extend",
+        ("tuner", "step"),
+        "PROFILE window elapsed with an empty reuse histogram; profiling "
+        "continues for another window"),
+    # -- tiering: the page scheduler (step domain) ---------------------------
+    _ev("tier.move",
+        ("manager", "step", "period", "promoted", "evicted", "pages_moved",
+         "cost"),
+        "one tiering boundary: pages promoted into HBM, lazily evicted, "
+        "total pages of data moved (2x promotions: k+v) and the modeled "
+        "migration+wakeup cost"),
+    # -- serve: the continuous-batching scheduler (wall clock) ---------------
+    _ev("serve.admit",
+        ("step", "joiners", "pages", "queue_depth", "wall_ms"),
+        "one admission batch: requests packed-prefilled together, pages "
+        "allocated, queue depth after, prefill wall time"),
+    _ev("serve.retire",
+        ("step", "rid", "tokens"),
+        "a request left the system (EOS or length); its pages recycle"),
+    _ev("serve.macro",
+        ("step", "n_steps", "tokens", "active", "fetched", "wall_ms",
+         "straggler"),
+        "one macro-step launch: a movement period of device-resident "
+        "decode -- scan length, tokens served, mean active rows, up-front "
+        "prefetch misses, wall time, StepTimer straggler flag"),
+    _ev("serve.stream",
+        ("phase", "tokens", "wall_ms"),
+        "single-stream monitored_generate started/finished"),
+    # -- ft: fault-tolerance runtime -----------------------------------------
+    _ev("ft.straggler",
+        ("timer", "step", "dt_s", "ema_s"),
+        "StepTimer flagged a step slower than threshold x EMA (serving "
+        "macro launches and the training step share this event)"),
+    # -- meta: records written by the exporters, never emit()ed --------------
+    _ev("metrics.summary",
+        ("schema", "counters", "gauges", "hists"),
+        "final JSONL record: the Recorder's counters/gauges/histogram "
+        "summaries (written by the exporter, not an emit site)"),
+]
+
+EVENTS: Dict[str, Event] = {e.name: e for e in _ALL}

@@ -19,6 +19,7 @@ in macro-step mode the signal reaches the host once per movement period.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -28,6 +29,7 @@ import numpy as np
 from repro.models import layers as L
 from repro.models import model as mdl
 from repro.models.config import ModelConfig, parse_kind
+from repro.obs import telemetry as _obs
 
 __all__ = ["generate", "monitored_generate", "page_mass_from_attention",
            "make_monitor", "monitor_slot"]
@@ -153,6 +155,10 @@ def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
     max_len = plen + prefix + steps
     n_pages = -(-max_len // page_size)
     key = key if key is not None else jax.random.PRNGKey(0)
+    t_start = time.monotonic()
+    if (r := _obs.RECORDER).enabled:
+        r.emit("serve.stream", phase="start", tokens=int(b * steps),
+               wall_ms=0.0)
 
     logits, cache = mdl.prefill(params, cfg, prompt_tokens, cond=cond,
                                 extra_embeds=extra_embeds)
@@ -173,5 +179,8 @@ def monitored_generate(params, cfg: ModelConfig, prompt_tokens, steps: int,
         tok = _sample(logits[:, 0], key, temperature)[:, None]
         out.append(tok)
         pos = pos + 1
+    if (r := _obs.RECORDER).enabled:
+        r.emit("serve.stream", phase="finish", tokens=int(b * steps),
+               wall_ms=(time.monotonic() - t_start) * 1e3)
     return (jnp.concatenate(out, axis=1),
             np.stack(masses) if masses else np.zeros((0, n_pages)))

@@ -50,6 +50,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -58,12 +59,14 @@ import numpy as np
 
 from repro.core import cori
 from repro.core.traffic import RequestSpec
+from repro.ft.monitor import StepTimer
 from repro.kernels import ops
 from repro.memtier import workload as W
 from repro.memtier.tiering import (PAGE_DROP, SharedPagedPools,
                                    TieringManager, bucket_pages,
                                    write_pages_batched)
 from repro.models import model as mdl
+from repro.obs import telemetry as _obs
 from repro.serve import engine as E
 
 __all__ = ["Request", "TrafficMonitor", "ContinuousBatcher",
@@ -302,6 +305,11 @@ class ContinuousBatcher:
             self._prefill_fn = jax.jit(functools.partial(
                 mdl.prefill_batched, params, cfg))
 
+        # macro-launch straggler detection (the serving twin of the
+        # training loop's step timer); its name routes flags and the
+        # step-time histogram into the flight recorder
+        self.macro_timer = StepTimer(name="serve.macro")
+
         self.tok = jnp.zeros((max_active, 1), jnp.int32)
         self.pos = jnp.zeros((max_active,), jnp.int32)
         self.rows_free = list(range(max_active - 1, -1, -1))
@@ -400,7 +408,16 @@ class ContinuousBatcher:
             batch.append(req)
         if not batch:
             return []
-        return self._prefill(batch)
+        t0 = time.monotonic()
+        emitted = self._prefill(batch)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.admit", step=self.step_idx, joiners=len(batch),
+                   pages=int(sum(b.n_alloc for b in batch)),
+                   queue_depth=len(self.queue),
+                   wall_ms=(time.monotonic() - t0) * 1e3)
+            r.count("serve.admitted", len(batch))
+            r.gauge("serve.queue_depth", len(self.queue))
+        return emitted
 
     def _prefill(self, batch: List[Request]) -> List[Tuple[int, int]]:
         """Prefill a step's joiners as one packed forward pass, seed their
@@ -507,15 +524,18 @@ class ContinuousBatcher:
         decode the request set, sample, retire.  Returns the (rid, token)
         pairs emitted this step, including the prefill-sampled first token
         of newly admitted requests."""
+        track = (r := _obs.RECORDER).enabled
+        t0 = time.monotonic() if track else 0.0
         emitted = self._admit()
         self.step_idx += 1
-        if not self.active:
-            return emitted
-        if self.paged:
-            emitted += (self._step_paged_macro() if self.macro
-                        else self._step_paged())
-        else:
-            emitted += self._step_dense()
+        if self.active:
+            if self.paged:
+                emitted += (self._step_paged_macro() if self.macro
+                            else self._step_paged())
+            else:
+                emitted += self._step_dense()
+        if track:
+            r.observe("serve.step_s", time.monotonic() - t0)
         return emitted
 
     def _step_dense(self) -> List[Tuple[int, int]]:
@@ -674,6 +694,8 @@ class ContinuousBatcher:
             eos[row] = -1 if req.eos_id is None else req.eos_id
             temps[row] = req.temperature
 
+        n_flags = len(self.macro_timer.stragglers)
+        self.macro_timer.start()
         toks, kv, st = self._macro_fn(n_steps)(
             pools.kv_view(), jnp.asarray(tables),
             jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
@@ -686,6 +708,10 @@ class ContinuousBatcher:
         alive_steps = np.asarray(st["alive_steps"])
         stopped = np.asarray(st["stopped"])
         iters_out = np.asarray(st["iters"])
+        # the downloads above force the device sync: the stop covers the
+        # whole launch + transfer, which is what a straggler would slow
+        macro_wall = self.macro_timer.stop(self.step_idx)
+        straggler = len(self.macro_timer.stragglers) > n_flags
 
         # ONE merge + monitor feed per movement period (mean mass over
         # the steps each row actually ran, so the per-step scale the
@@ -716,6 +742,13 @@ class ContinuousBatcher:
             req._i = int(iters_out[row])
             if stopped[row]:
                 self._retire(req)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.macro", step=self.step_idx, n_steps=int(n_steps),
+                   tokens=len(emitted),
+                   active=float(alive_steps.sum()) / dt,
+                   fetched=int(fetched), wall_ms=macro_wall * 1e3,
+                   straggler=straggler)
+            r.count("serve.tokens", len(emitted))
         return emitted
 
     def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:
@@ -737,6 +770,10 @@ class ContinuousBatcher:
             self._gid_tables[req.row, :] = -1
         if self.monitor is not None:
             self.monitor.release(req.gids)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.retire", step=self.step_idx, rid=req.rid,
+                   tokens=len(req.tokens))
+            r.count("serve.retired")
 
     # -- shared-pool data path -----------------------------------------------
     def _mirror(self, req: Request, pages) -> None:
@@ -883,6 +920,7 @@ class TrafficScheduler:
         return bucket_pages(n_exact, cap=max(self.row_pages, n_exact))
 
     def step(self) -> None:
+        joiners = pages = 0
         while (self.pending and self.pending[0].arrival <= self.now
                and len(self.active) < self.max_active):
             spec = self.pending[0]
@@ -900,11 +938,18 @@ class TrafficScheduler:
             self.pending.popleft()
             pattern = self.kinds[spec.kind](spec, n_pages)
             self.admitted += 1
+            joiners += 1
+            pages += n_alloc
             if pattern.shape[0] == 0:      # zero-lifetime: retire at once
                 self.monitor.release(gids)
                 self.completed += 1
                 continue
             self.active.append(_SynthActive(spec, gids, pattern))
+        if joiners and (r := _obs.RECORDER).enabled:
+            r.emit("serve.admit", step=self.now, joiners=joiners,
+                   pages=pages, queue_depth=len(self.pending), wall_ms=0.0)
+            r.count("serve.admitted", joiners)
+            r.gauge("serve.queue_depth", len(self.pending))
 
         # idle steps are not fed to the monitor (matching the model-backed
         # batcher): an empty lull's near-zero cost would read as a phase
@@ -924,6 +969,10 @@ class TrafficScheduler:
             if a.t >= a.pattern.shape[0]:
                 self.monitor.release(a.gids)
                 self.completed += 1
+                if (r := _obs.RECORDER).enabled:
+                    r.emit("serve.retire", step=self.now, rid=a.spec.rid,
+                           tokens=int(a.pattern.shape[0]))
+                    r.count("serve.retired")
             else:
                 still.append(a)
         self.active = still
