@@ -112,6 +112,20 @@ def smoke() -> None:
         "telemetry-enabled macro-loop throughput must stay within 3% of " \
         f"disabled (got {ov['ratio']:.3f})"
 
+    # paged MLA admission: compressed-row deepseek pages out of the same
+    # slot pool, token-identical and >= 1.5x leaner than dense rows
+    # (results land in traffic_mla.json for cross-PR tracking)
+    with Timer() as t:
+        m = traffic.mla(quick=True)
+    print(f"smoke_mla,{t.us:.0f},"
+          f"page_reduction={m['page_reduction_x']:.2f}x;"
+          f"parity={m['token_identical']}")
+    assert m["token_identical"], \
+        "paged MLA decode diverged from per-request generate"
+    assert m["page_reduction_x"] >= 1.5, \
+        "paged MLA admission must provision >= 1.5x fewer pages than " \
+        f"dense rows (got {m['page_reduction_x']:.2f}x)"
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()

@@ -71,3 +71,28 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
     if not return_mass:
         return out
     return out, mass
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "return_mass", "impl"))
+def paged_attention_mla(q_abs, q_rope, ckv_pages, krope_pages, page_table,
+                        lengths, *, scale: float, return_mass: bool = False,
+                        impl: str = "interpret"):
+    """MLA absorbed-matrix decode over compressed paged rows (ckv shared
+    across heads + roped krope).  Same ragged-table clamp contract as
+    ``paged_attention``; ``scale`` = 1/sqrt(qk_nope_dim + qk_rope_dim).
+    Returns the compressed-space context [B, H, R] (callers up-project
+    with W_uv) and, with ``return_mass``, the per-page mass f32[B, n]."""
+    page_table = jnp.maximum(page_table, 0)
+    if impl == "reference":
+        return _ref.paged_attention_mla_ref(q_abs, q_rope, ckv_pages,
+                                            krope_pages, page_table, lengths,
+                                            scale=scale,
+                                            return_mass=return_mass)
+    out, mass = _pa.paged_attention_mla(q_abs, q_rope, ckv_pages,
+                                        krope_pages, page_table, lengths,
+                                        scale=scale,
+                                        interpret=(impl == "interpret"))
+    if not return_mass:
+        return out
+    return out, mass

@@ -162,3 +162,112 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
                    jax.ShapeDtypeStruct((b, n_pages), jnp.float32)],
         interpret=interpret,
     )(page_table, lengths, q, k_pages, v_pages)
+
+
+def _mla_kernel(page_table, lengths, qa_ref, qr_ref, ckv_ref, kr_ref,
+                o_ref, mass_ref, m_scr, l_scr, acc_scr, p_scr, *,
+                page: int, n_pages: int, scale: float):
+    """Absorbed-matrix MLA decode over compressed pages.
+
+    Same online-softmax + fused per-page mass cascade as ``_kernel``, but
+    the page holds one *compressed* row per token -- ckv [page, R] shared
+    across every head (not roped) plus krope [page, K] roped positional
+    keys -- so the logits are the sum of two head x page dots and the
+    "values" are the ckv rows themselves (the caller up-projects with
+    W_uv outside the kernel).
+    """
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        p_scr[...] = jnp.zeros_like(p_scr)
+
+    qa = qa_ref[0]                                 # [H, R]
+    qr = qr_ref[0]                                 # [H, K]
+    ckv = ckv_ref[0]                               # [page, R]
+    kr = kr_ref[0]                                 # [page, K]
+    h = qa.shape[0]
+    length = lengths[b]
+
+    pos = pi * page + jax.lax.iota(jnp.int32, page)
+    valid = pos < length                           # [page]
+
+    logits = (jax.lax.dot_general(
+        qa, ckv, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(
+        qr, kr, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)) * scale   # [H, page]
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    m_prev = m_scr[...]                            # [H, 1]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    ctx = jax.lax.dot_general(
+        p.astype(ckv.dtype), ckv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # [H, R]
+    acc_scr[...] = acc_scr[...] * corr + ctx
+    page_col = (jax.lax.iota(jnp.int32, n_pages) == pi).astype(jnp.float32)
+    p_scr[...] = p_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True) \
+        * page_col[None, :]
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(pi == n_pages - 1)
+    def _flush():
+        l_safe = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+        mass_ref[0] = jnp.sum(p_scr[...] / l_safe, axis=0) / h
+
+
+def paged_attention_mla(q_abs, q_rope, ckv_pages, krope_pages, page_table,
+                        lengths, *, scale: float, interpret: bool = False):
+    """MLA decode over compressed paged rows.
+
+    q_abs: [B, H, R]; q_rope: [B, H, K]; ckv_pages: [P_phys, page, R];
+    krope_pages: [P_phys, page, K].  ``scale`` is 1/sqrt(qk_nope + qk_rope)
+    (the uncompressed head dim, not derivable from compressed shapes).
+    Returns (ctx [B, H, R] in the compressed space, mass f32[B, n_pages])."""
+    b, h, rdim = q_abs.shape
+    kdim = q_rope.shape[2]
+    _, page, _ = ckv_pages.shape
+    n_pages = page_table.shape[1]
+
+    kernel = functools.partial(_mla_kernel, page=page, n_pages=n_pages,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, rdim), lambda bi, pi, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, h, kdim), lambda bi, pi, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, page, rdim),
+                         lambda bi, pi, pt, ln: (pt[bi, pi], 0, 0)),
+            pl.BlockSpec((1, page, kdim),
+                         lambda bi, pi, pt, ln: (pt[bi, pi], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, rdim), lambda bi, pi, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, n_pages), lambda bi, pi, pt, ln: (bi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, rdim), jnp.float32),
+            pltpu.VMEM((h, n_pages), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, h, rdim), q_abs.dtype),
+                   jax.ShapeDtypeStruct((b, n_pages), jnp.float32)],
+        interpret=interpret,
+    )(page_table, lengths, q_abs, q_rope, ckv_pages, krope_pages)

@@ -77,3 +77,40 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
         return out
     mass = w.sum(axis=1).reshape(b, n, page).sum(axis=-1) / h   # [B, n]
     return out, mass
+
+
+def paged_attention_mla_ref(q_abs, q_rope, ckv_pages, krope_pages,
+                            page_table, lengths, *, scale: float,
+                            return_mass: bool = False):
+    """MLA compressed-row paged decode (absorbed-matrix form).
+
+    q_abs: [B,H,R] -- W_uk-absorbed no-pe queries in the kv_lora space;
+    q_rope: [B,H,K] -- roped positional queries; ckv_pages: [P,page,R]
+    compressed KV rows (shared across heads, *not* roped); krope_pages:
+    [P,page,K] roped positional keys; page_table: [B,n]; lengths: [B].
+    ``scale`` is 1/sqrt(qk_nope_dim + qk_rope_dim) -- the *uncompressed*
+    head dim, which is not derivable from the compressed shapes.
+
+    Returns the context in the compressed space, [B,H,R] (the caller
+    up-projects with W_uv), plus the head-normalised per-page mass
+    f32[B,n] when ``return_mass`` -- the same "accessed bits" signal as
+    ``paged_attention_ref``.
+    """
+    b, h, rdim = q_abs.shape
+    _, page, _ = ckv_pages.shape
+    n = page_table.shape[1]
+    ckv = ckv_pages[page_table].reshape(b, n * page, rdim)
+    krope = krope_pages[page_table].reshape(b, n * page, -1)
+    logits = (jnp.einsum("bhr,btr->bht", q_abs, ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhk,btk->bht", q_rope, krope,
+                           preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(n * page)[None, :]
+    valid = pos < lengths[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,btr->bhr", w.astype(ckv.dtype), ckv)
+    if not return_mass:
+        return out
+    mass = w.sum(axis=1).reshape(b, n, page).sum(axis=-1) / h   # [B, n]
+    return out, mass

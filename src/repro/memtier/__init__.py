@@ -15,10 +15,10 @@ import numpy as np
 from repro.core import cori
 from repro.memtier.tiering import (PagedPools, SharedPagedPools, TierConfig,
                                    TieringManager, bucket_pages,
-                                   write_pages_batched)
+                                   write_pages_batched, write_state_pages)
 
 __all__ = ["PagedPools", "SharedPagedPools", "TierConfig", "TieringManager",
-           "bucket_pages", "write_pages_batched",
+           "bucket_pages", "write_pages_batched", "write_state_pages",
            "replay", "online_replay", "cori_tune_period",
            "resident_mask", "interleaved_resident"]
 

@@ -55,7 +55,7 @@ from repro.kernels import ops
 from repro.obs import telemetry as _obs
 
 __all__ = ["TierConfig", "TieringManager", "PagedPools", "SharedPagedPools",
-           "bucket_pages", "write_pages_batched"]
+           "bucket_pages", "write_pages_batched", "write_state_pages"]
 
 
 def bucket_pages(n_pages: int, cap: Optional[int] = None) -> int:
@@ -176,8 +176,12 @@ class SharedPagedPools:
         self.k_hbm, self.v_hbm = k_hbm, v_hbm
         # fully-paged mode: one KV leaf per attention layer slot, all
         # indirected by the SAME slot_of table (see attach_layered_kv)
-        self.kv_layers: Optional[Dict[str, List[jnp.ndarray]]] = None
+        self.kv_layers: Optional[Dict[str, List[Optional[jnp.ndarray]]]] = None
         self.layer_meta: Tuple = ()
+        #: per-layer leaf-name tuples (set by ``attach_layered``)
+        self.layer_leaves: Tuple = ()
+        #: leaves moved per page migration (tier.move accounting)
+        self.move_planes = 2
         self.slot_of = np.full((n_logical,), -1, np.int32)
         self.page_of_slot = np.full((hbm_pages,), -1, np.int32)
         self.owner_of = np.full((n_logical,), -1, np.int64)
@@ -207,32 +211,68 @@ class SharedPagedPools:
                    k_hbm=jnp.zeros(hshape, dtype),
                    v_hbm=jnp.zeros(hshape, dtype))
 
+    def attach_layered(self, layer_specs: Sequence[Tuple[int, Dict[str,
+                       Tuple[int, ...]]]], *, dtype=jnp.float32) -> None:
+        """Grow per-layer cache storage for the fully-paged decode path
+        from *per-geometry leaf specs*: one ``(repeats, {leaf_name:
+        trailing_shape})`` entry per state-bearing layer slot.  A plain
+        attention slot attaches ``{"k": (page, KV, D), "v": ...}``; an MLA
+        slot attaches compressed ``{"ckv": (page, kv_lora), "krope":
+        (page, rope)}`` rows; a recurrent slot attaches one fixed-size
+        ``{"state": (state_dim,)}`` page per request.  Every leaf is
+        stacked over its slot's ``repeats``: host side
+        [R, n_logical, *trailing], HBM side [R, hbm_pages, *trailing].
+        All leaves share this pool's single ``slot_of`` table -- a logical
+        page is resident for every layer or for none, and migrations move
+        all of a page's leaves together.  Layers lacking a leaf hold
+        ``None`` in that leaf's per-layer list, so mismatched geometries
+        can never cross-contaminate."""
+        names: List[str] = []
+        for _, leaves in layer_specs:
+            for name in leaves:
+                if name not in names:
+                    names.append(name)
+        kv: Dict[str, List[Optional[jnp.ndarray]]] = {}
+        for name in names:
+            for tier in ("hbm", "host"):
+                kv[f"{name}_{tier}"] = []
+        for r, leaves in layer_specs:
+            for name in names:
+                if name in leaves:
+                    trail = tuple(int(x) for x in leaves[name])
+                    kv[f"{name}_host"].append(
+                        jnp.zeros((int(r), self.n_logical) + trail, dtype))
+                    kv[f"{name}_hbm"].append(
+                        jnp.zeros((int(r), self.hbm_pages) + trail, dtype))
+                else:
+                    kv[f"{name}_host"].append(None)
+                    kv[f"{name}_hbm"].append(None)
+        self.kv_layers = kv
+        self.layer_meta = tuple(int(r) for r, _ in layer_specs)
+        self.layer_leaves = tuple(tuple(leaves) for _, leaves in layer_specs)
+        # pages_moved accounting: how many per-page planes (leaves) one
+        # logical-page migration moves.  The classic (k, v) geometry is 2.
+        self.move_planes = max((len(lv) for lv in self.layer_leaves),
+                               default=2)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("pool.attach", layers=len(self.layer_meta),
+                   leaves=",".join(names), planes=self.move_planes)
+
     def attach_layered_kv(self, layer_repeats: Sequence[int], *,
                           page_size: int, kv_heads: int, head_dim: int,
                           dtype=jnp.float32) -> None:
-        """Grow per-layer KV storage for the fully-paged decode path: one
-        (k, v) leaf pair per attention layer slot, stacked over that
-        slot's ``repeats``, host side [R, n_logical, page, KV, D] and HBM
-        side [R, hbm_pages, page, KV, D].  All leaves share this pool's
-        single ``slot_of`` table -- a logical page is resident for every
-        layer or for none, and migrations move all layers together."""
-        k_hbm, v_hbm, k_host, v_host = [], [], [], []
-        for r in layer_repeats:
-            hshape = (r, self.n_logical, page_size, kv_heads, head_dim)
-            dshape = (r, self.hbm_pages, page_size, kv_heads, head_dim)
-            k_host.append(jnp.zeros(hshape, dtype))
-            v_host.append(jnp.zeros(hshape, dtype))
-            k_hbm.append(jnp.zeros(dshape, dtype))
-            v_hbm.append(jnp.zeros(dshape, dtype))
-        self.kv_layers = {"k_hbm": k_hbm, "v_hbm": v_hbm,
-                          "k_host": k_host, "v_host": v_host}
-        self.layer_meta = tuple(int(r) for r in layer_repeats)
+        """Back-compat wrapper over ``attach_layered`` for the classic
+        all-attention geometry: one (k, v) leaf pair per attention layer
+        slot, [R, n_logical, page, KV, D] host / [R, hbm_pages, ...] HBM."""
+        trail = (int(page_size), int(kv_heads), int(head_dim))
+        self.attach_layered([(int(r), {"k": trail, "v": trail})
+                             for r in layer_repeats], dtype=dtype)
 
     def kv_view(self) -> Dict[str, List[jnp.ndarray]]:
         """The layered-KV pytree a jitted paged decode step consumes (and
         returns updated; store it back with ``set_kv``)."""
         if self.kv_layers is None:
-            raise ValueError("no layered KV attached (attach_layered_kv)")
+            raise ValueError("no layered cache attached (attach_layered)")
         return {k: list(v) for k, v in self.kv_layers.items()}
 
     def set_kv(self, kv: Dict[str, List[jnp.ndarray]]) -> None:
@@ -332,11 +372,13 @@ class SharedPagedPools:
             self.v_hbm = _migrate(self.v_hbm, self.v_host, sl, lg)
         if self.kv_layers is not None:
             kv = self.kv_layers
-            for i in range(len(kv["k_hbm"])):
-                kv["k_hbm"][i] = _migrate_stacked(kv["k_hbm"][i],
-                                                  kv["k_host"][i], sl, lg)
-                kv["v_hbm"][i] = _migrate_stacked(kv["v_hbm"][i],
-                                                  kv["v_host"][i], sl, lg)
+            for hk in [k for k in kv if k.endswith("_hbm")]:
+                dk = hk[:-4] + "_host"
+                for i in range(len(kv[hk])):
+                    if kv[hk][i] is None:
+                        continue
+                    kv[hk][i] = _migrate_stacked(kv[hk][i], kv[dk][i],
+                                                 sl, lg)
 
     def _place(self, gids: np.ndarray) -> Tuple[List[int], np.ndarray]:
         """Slot bookkeeping shared by ``ensure_resident`` and
@@ -395,41 +437,64 @@ PAGE_DROP = np.int32(2 ** 30)      # out-of-range scatter index => dropped
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def write_pages_batched(kv, ks_new, vs_new, gids, slots):
-    """On-device prefill scatter: write a packed-prefill step's KV for
-    EVERY attention layer and EVERY joiner straight into the layered page
-    pools, host and HBM tiers together, in one jitted gather/scatter.
+def write_pages_batched(kv, new_leaves, gids, slots):
+    """On-device prefill scatter: write a packed-prefill step's cache rows
+    for EVERY token-paged leaf and EVERY joiner straight into the layered
+    page pools, host and HBM tiers together, in one jitted gather/scatter.
 
-    kv:             the layered pool pytree (``SharedPagedPools.kv_view``;
-                    donated -- XLA updates the pool buffers in place).
-    ks_new/vs_new:  one leaf per ``attn_slot_meta`` entry, each
-                    [R, J, smax, KV, D]: the batched-prefill cache rows of
-                    the J joiners (right-padded to smax).
-    gids / slots:   int32[J, n_max] logical page ids / HBM slot ids per
-                    joiner page; entries >= the pool size (``PAGE_DROP``)
-                    are dropped -- the ragged padding of short prompts.
+    kv:          the layered pool pytree (``SharedPagedPools.kv_view``;
+                 donated -- XLA updates the pool buffers in place).
+    new_leaves:  {leaf_name: [per-layer arrays or None]}, each array
+                 [R, J, smax, *rest]: the batched-prefill cache rows of
+                 the J joiners (right-padded to smax).  ``rest`` is the
+                 leaf's per-token trailing shape -- (KV, D) for k/v,
+                 (kv_lora,) for MLA ckv, (rope,) for krope.
+    gids/slots:  int32[J, n_max] logical page ids / HBM slot ids per
+                 joiner page; entries >= the pool size (``PAGE_DROP``)
+                 are dropped -- the ragged padding of short prompts.
 
     Replaces the host-side per-request x per-layer x per-tensor ``.at``
-    loop: J*L*2 separate dispatches collapse into one launch, and the
+    loop: J*L*leaves separate dispatches collapse into one launch, and the
     prefill bytes never take the host detour (on TPU they go HBM->HBM).
     """
     j, n_max = gids.shape
     gidf = gids.reshape(-1)
     slotf = slots.reshape(-1)
     out = {k: list(v) for k, v in kv.items()}
-    for li in range(len(ks_new)):
-        ps = kv["k_host"][li].shape[2]
-        for name, new in (("k", ks_new[li]), ("v", vs_new[li])):
-            r, _, smax, kvh, d = new.shape
+    for name, layers in new_leaves.items():
+        for li, new in enumerate(layers):
+            if new is None:
+                continue
+            ps = kv[f"{name}_host"][li].shape[2]
+            r, _, smax = new.shape[:3]
+            rest = new.shape[3:]
             pad = n_max * ps - smax
             if pad > 0:
-                new = jnp.pad(new, ((0, 0), (0, 0), (0, pad), (0, 0),
-                                    (0, 0)))
-            pages = new[:, :, : n_max * ps].reshape(r, j * n_max, ps, kvh, d)
+                new = jnp.pad(new, ((0, 0), (0, 0), (0, pad))
+                              + ((0, 0),) * len(rest))
+            pages = new[:, :, : n_max * ps].reshape((r, j * n_max, ps)
+                                                    + rest)
             out[f"{name}_host"][li] = out[f"{name}_host"][li].at[
                 :, gidf].set(pages, mode="drop")
             out[f"{name}_hbm"][li] = out[f"{name}_hbm"][li].at[
                 :, slotf].set(pages, mode="drop")
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_state_pages(kv, states, gids, slots):
+    """Scatter recurrent state pages into the pool, both tiers at once.
+    ``states``: one [R, J, state_dim] leaf (or None) per layer slot;
+    ``gids``/``slots``: int32[J] -- each joiner's single state page
+    (``PAGE_DROP`` entries are dropped)."""
+    out = {k: list(v) for k, v in kv.items()}
+    for li, st in enumerate(states):
+        if st is None:
+            continue
+        out["state_host"][li] = out["state_host"][li].at[:, gids].set(
+            st, mode="drop")
+        out["state_hbm"][li] = out["state_hbm"][li].at[:, slots].set(
+            st, mode="drop")
     return out
 
 
@@ -582,16 +647,19 @@ class TieringManager:
             pools.touch_slots(slots)   # shared pools track slot recency
             pools.migrate_slots(slots, bring)
         self.migrations += int(n_mig)
-        # 2x = the k page + the v page per migration; evictions move no
-        # data (the host copy is write-through, dropping a slot is free)
-        self.data_moved_pages += 2 * int(n_mig)
+        # planes x = one plane per leaf of the pool's geometry (k + v for
+        # classic attention, ckv + krope for MLA, 1 for state-only pools);
+        # evictions move no data (the host copy is write-through, dropping
+        # a slot is free)
+        planes = int(getattr(pools, "move_planes", 2))
+        self.data_moved_pages += planes * int(n_mig)
         self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
         if (r := _obs.RECORDER).enabled:
             r.emit("tier.move", manager=self.obs_id, step=self.step,
                    period=self.period, promoted=int(n_mig),
-                   evicted=int(len(evict)), pages_moved=2 * int(n_mig),
+                   evicted=int(len(evict)), pages_moved=planes * int(n_mig),
                    cost=float(n_mig * cfg.mig_cost + cfg.wakeup_cost))
-            r.count("tier.pages_moved", 2 * int(n_mig))
+            r.count("tier.pages_moved", planes * int(n_mig))
         return pools
 
     def maybe_tier_symbolic(self, resident: np.ndarray,

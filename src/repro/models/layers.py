@@ -306,7 +306,11 @@ def mla_decode(p: Params, cfg: ModelConfig, x, cache_ckv, cache_krope,
     q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x.dtype))
     logits = (jnp.einsum("bshr,btr->bhst", q_abs, ckv)
               + jnp.einsum("bshk,btk->bhst", q_rope, krope))
-    logits = logits.astype(jnp.float32) / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    # multiply by the precomputed scale (not divide by sqrt) so the paged
+    # MLA kernel, which takes `scale` as a static operand, stays
+    # bit-identical to this dense path
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    logits = logits.astype(jnp.float32) * scale
     mask = (pos_all <= cur_pos[:, None]) & (pos_all >= 0)
     logits = jnp.where(mask[:, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)

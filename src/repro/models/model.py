@@ -549,52 +549,116 @@ def pad_cache(cache, cfg: ModelConfig, max_len: int):
 # ---------------------------------------------------------------------------
 
 
-def attn_slot_meta(cfg: ModelConfig):
-    """Attention slots in execution order: (si, j, repeats, window, kind).
+def state_slot_meta(cfg: ModelConfig):
+    """EVERY state-bearing slot in execution order: (si, j, repeats,
+    window, kind) -- plain/local attention, MLA and recurrent cells alike.
 
-    This is the layer enumeration the shared page pools mirror: one KV
-    leaf per (segment, slot), stacked ``[repeats, ...]`` exactly like the
-    parameter tree, so the paged decode scan can slice pools and params
-    with the same index."""
+    This is the layer enumeration the shared page pools mirror: one set of
+    geometry leaves per (segment, slot), stacked ``[repeats, ...]``
+    exactly like the parameter tree, so the paged decode scan can slice
+    pools and params with the same index."""
     out = []
     for si, (pattern, repeats) in enumerate(cfg.segments):
         for j, kind_s in enumerate(pattern):
             kind = parse_kind(kind_s)
-            if kind.is_attention:
-                window = cfg.window_size if kind.base == "local" else 0
-                out.append((si, j, repeats, window, kind))
+            window = (cfg.window_size
+                      if kind.is_attention and kind.base == "local" else 0)
+            out.append((si, j, repeats, window, kind))
     return out
 
 
+def attn_slot_meta(cfg: ModelConfig):
+    """The attention subset of ``state_slot_meta`` (same tuple layout)."""
+    return [m for m in state_slot_meta(cfg) if m[4].is_attention]
+
+
 def attn_slot_index(cfg: ModelConfig, si: int, j: int) -> int:
-    """Index of segment ``si`` slot ``j`` in the ``attn_slot_meta`` order
-    (== its KV leaf index in the shared pools' layered storage)."""
-    for i, (si_, j_, _, _, _) in enumerate(attn_slot_meta(cfg)):
+    """Index of segment ``si`` slot ``j`` in the ``state_slot_meta`` order
+    (== its leaf index in the shared pools' layered storage).  The slot
+    must be an attention slot (its leaves are k/v or ckv/krope)."""
+    for i, (si_, j_, _, _, kind) in enumerate(state_slot_meta(cfg)):
         if (si_, j_) == (si, j):
+            if not kind.is_attention:
+                break
             return i
     raise ValueError(f"({si}, {j}) is not an attention slot of {cfg.name}")
 
 
-def paged_supported(cfg: ModelConfig) -> bool:
-    """Whether decode can run fully paged: every layer with KV state is a
-    plain (non-MLA) attention layer, and positions are gapless.
+def _zero_state(cfg: ModelConfig, kind: LayerKind, batch: int):
+    zero = {"mlstm": R.mlstm_zero_state, "slstm": R.slstm_zero_state,
+            "rglru": R.rglru_zero_state}[kind.base]
+    return zero(cfg, batch)
 
-    * MLA caches compress to (ckv, krope) rows -- a different page
-      geometry; they stay on the dense path until the pools grow a
-      second leaf shape.
-    * Recurrent cells carry O(1) state, not KV pages, and a right-padded
-      batched prefill would fold padding tokens into that state.
-    * ``prefix_len > 0`` leaves a position gap between the prompt and the
-      first decode position (engine semantics), which the paged kernel's
-      ``pos < length`` validity test cannot express.
-    """
-    if cfg.prefix_len:
-        return False
-    for pattern, _ in cfg.segments:
-        for kind_s in pattern:
-            kind = parse_kind(kind_s)
-            if not kind.is_attention or kind.mla:
-                return False
+
+def state_dim(cfg: ModelConfig, kind: LayerKind) -> int:
+    """Flattened per-row float count of one recurrent cell's state -- the
+    trailing dim of its pool leaf (one logical "page" per request)."""
+    proto = _zero_state(cfg, kind, 1)
+    return sum(int(np.prod(a.shape[1:])) for a in jax.tree.leaves(proto))
+
+
+def pack_state(state) -> jnp.ndarray:
+    """Flatten a recurrent state pytree to f32[B, state_dim] (canonical
+    tree-leaf order).  Pure reshape/concat -- bit-exact round trip."""
+    leaves = jax.tree.leaves(state)
+    b = leaves[0].shape[0]
+    return jnp.concatenate(
+        [a.reshape(b, -1).astype(jnp.float32) for a in leaves], axis=1)
+
+
+def unpack_state(flat: jnp.ndarray, proto):
+    """Inverse of ``pack_state`` against a same-structure prototype (e.g.
+    the cell's zero state at the right batch)."""
+    leaves, treedef = jax.tree.flatten(proto)
+    b = flat.shape[0]
+    out, o = [], 0
+    for a in leaves:
+        n = int(np.prod(a.shape[1:]))
+        out.append(flat[:, o:o + n].reshape((b,) + a.shape[1:])
+                   .astype(a.dtype))
+        o += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def slot_leaf_specs(cfg: ModelConfig, page_size: int):
+    """Per-geometry leaf specs for ``SharedPagedPools.attach_layered``:
+    one ``(repeats, {leaf_name: trailing_shape})`` entry per
+    ``state_slot_meta`` slot.  Plain attention pages hold (k, v) token
+    rows; MLA pages hold compressed (ckv, krope) rows shared across
+    heads; recurrent cells hold one fixed-size state vector per request
+    (a single logical page, tiered like any other)."""
+    specs = []
+    for (_, _, repeats, _, kind) in state_slot_meta(cfg):
+        if kind.is_attention and kind.mla:
+            m = cfg.mla
+            leaves = {"ckv": (page_size, m.kv_lora_rank),
+                      "krope": (page_size, m.qk_rope_dim)}
+        elif kind.is_attention:
+            leaves = {"k": (page_size, cfg.num_kv_heads, cfg.head_dim),
+                      "v": (page_size, cfg.num_kv_heads, cfg.head_dim)}
+        else:
+            leaves = {"state": (state_dim(cfg, kind),)}
+        specs.append((repeats, leaves))
+    return specs
+
+
+def has_state_pages(cfg: ModelConfig) -> bool:
+    """Whether any slot is a recurrent cell (the request then carries one
+    extra logical "state page" after its KV pages)."""
+    return any(not k.is_attention for (_, _, _, _, k) in state_slot_meta(cfg))
+
+
+def has_attention(cfg: ModelConfig) -> bool:
+    return any(k.is_attention for (_, _, _, _, k) in state_slot_meta(cfg))
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Every registered geometry now runs fully paged: plain/local
+    attention (k, v) pages, MLA compressed (ckv, krope) pages, recurrent
+    state slots, shared read-only prefix pages and cross-attention
+    conditioning are all expressible on the shared slot pool
+    (``slot_leaf_specs``).  Kept as an API point for callers that gate on
+    it; always True for the config registry."""
     return True
 
 
@@ -611,10 +675,15 @@ def batched_prefill_supported(cfg: ModelConfig) -> bool:
 
 
 def prefill_batched(params, cfg: ModelConfig, tokens, lengths, *, cond=None,
-                    mesh=None, shard=_IDENT):
+                    extra_embeds=None, mesh=None, shard=_IDENT):
     """Batched-admission prefill: one packed forward over right-padded
     prompts.  tokens: [B, Smax] int32 (rows padded with any id); lengths:
-    int32[B] true prompt length per row.
+    int32[B] true row length *including* any prepended prefix.
+
+    ``extra_embeds`` ([B, P, d], the shared VLM/audio prefix) is
+    prepended before the token embeddings exactly as in ``prefill``; the
+    cache timeline then starts at the prefix, so page writers slice it by
+    absolute position.
 
     Returns (last_logits [B,1,V], cache) where ``last_logits[b]`` is the
     logits at position ``lengths[b] - 1`` and the cache keeps the FULL
@@ -629,6 +698,8 @@ def prefill_batched(params, cfg: ModelConfig, tokens, lengths, *, cond=None,
         raise ValueError(f"{cfg.name}: batched prefill needs all-attention "
                          "layers (recurrent state would fold in padding)")
     x = L.embed(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
     b, s = x.shape[0], x.shape[1]
     positions = jnp.arange(s)[None]
     x = shard(x, ("batch", "seq", "embed"))
@@ -699,17 +770,20 @@ def row_cache_from_batched(cache, cfg: ModelConfig, bi: int, length: int,
 
 def decode_step_paged(params, cfg: ModelConfig, kv, tables, gid_tables,
                       tokens, cur_pos, *, page_size: int,
-                      impl: str = "reference", cond=None, mesh=None,
-                      shard=_IDENT):
-    """One decode step with EVERY attention layer reading and writing the
-    shared paged KV pools through ``kernels.paged_attention`` -- the
-    fully-paged serving hot path (no dense per-row cache exists).
+                      impl: str = "reference", cond=None, state_cols=None,
+                      mesh=None, shard=_IDENT):
+    """One decode step with EVERY state-bearing layer reading and writing
+    the shared paged pools -- the fully-paged serving hot path (no dense
+    per-row cache exists).  Plain attention gathers (k, v) pages through
+    ``kernels.paged_attention``; MLA gathers compressed (ckv, krope)
+    pages through ``kernels.paged_attention_mla``; recurrent cells read
+    and write one packed state page per request.
 
-    kv: {"k_hbm": [leaf..], "v_hbm": [..], "k_host": [..], "v_host": [..]}
-        one leaf per ``attn_slot_meta`` entry; HBM leaves are the resident
-        slot pools [R, hbm_pages, page, KV, D] the kernel gathers from,
-        host leaves [R, n_logical, page, KV, D] are the write-through
-        backing copy that survives eviction.
+    kv: the layered pool pytree (``SharedPagedPools.kv_view``): one leaf
+        set per ``state_slot_meta`` entry, named per geometry
+        (``k/v``, ``ckv/krope``, ``state``; absent leaves are None).  HBM
+        leaves are the resident slot pools the kernels gather from, host
+        leaves the write-through backing copy that survives eviction.
     tables:     int32[B, n_row_pages] physical HBM slot per row page
                 (-1 = padding / inactive row; reads are masked by length,
                 writes are dropped).
@@ -717,25 +791,27 @@ def decode_step_paged(params, cfg: ModelConfig, kv, tables, gid_tables,
                 (-1 = padding), for the host-copy write-through.
     tokens: [B,1]; cur_pos: int32[B], position of the token being decoded
                 (-1 = inactive row).
+    cond:       [B, T, d] cross-attention conditioning for xattn slots.
+    state_cols: int32[B] column of each request's state page in its row
+                tables (-1 = none); required iff the config has recurrent
+                slots.
 
     Returns (logits [B,1,V], new_kv, page_mass f32[B, n_row_pages]) where
-    ``page_mass`` is the per-request attention-probability mass per row
-    page aggregated over ALL attention layers (head-normalised per layer,
+    ``page_mass`` is the per-request access mass per row page aggregated
+    over ALL state-bearing layers (head-normalised attention mass per
+    attention layer, a unit touch on the state page per recurrent layer,
     mean across layers -- each active row sums to ~1): the true aggregate
-    traffic signal online Cori tunes from, replacing the single
-    monitor-layer sample.
+    traffic signal online Cori tunes from.
     """
-    if not paged_supported(cfg):
-        raise ValueError(f"{cfg.name}: fully-paged decode needs all-"
-                         "attention (non-MLA) layers and prefix_len == 0")
     return _paged_decode_core(params, cfg, kv, tables, gid_tables, tokens,
                               cur_pos, page_size=page_size, impl=impl,
-                              cond=cond, mesh=mesh, shard=shard)
+                              cond=cond, state_cols=state_cols, mesh=mesh,
+                              shard=shard)
 
 
 def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
                        tokens, cur_pos, *, page_size: int, impl: str,
-                       cond=None, mesh=None, shard=_IDENT):
+                       cond=None, state_cols=None, mesh=None, shard=_IDENT):
     """The traced body shared by ``decode_step_paged`` (one launch per
     token) and ``decode_macro_step`` (one launch per movement period)."""
     b = tokens.shape[0]
@@ -750,6 +826,24 @@ def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
     big = jnp.int32(2 ** 30)                   # out of bounds => dropped
     wslot = jnp.where(active & (wslot >= 0), wslot, big)
     wgid = jnp.where(active & (wgid >= 0), wgid, big)
+    if state_cols is None and has_state_pages(cfg):
+        raise ValueError(f"{cfg.name}: paged decode over recurrent slots "
+                         "needs state_cols (column of each row's state "
+                         "page in `tables`)")
+    if state_cols is not None:
+        scol = jnp.maximum(jnp.asarray(state_cols, jnp.int32), 0)
+        sslot = tables[jnp.arange(b), scol]
+        sgid = gid_tables[jnp.arange(b), scol]
+        svalid = active & (jnp.asarray(state_cols) >= 0) & (sslot >= 0)
+        srd = jnp.maximum(sslot, 0)            # clamped read index
+        swslot = jnp.where(svalid, sslot, big)
+        swgid = jnp.where(svalid, sgid, big)
+        # a recurrent layer touches its state page once per step: a unit
+        # of access mass at the state column, same scale as an attention
+        # layer's head-normalised row (sums to ~1)
+        smass = jnp.where(
+            svalid[:, None] & (jnp.arange(n_row_pages)[None]
+                               == scol[:, None]), 1.0, 0.0)
 
     x = L.embed(params["embed"], cfg, tokens)
     x = shard(x, ("batch", "seq", "embed"))
@@ -759,10 +853,29 @@ def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
     n_layers = 0
     new_kv = {k_: list(v_) for k_, v_ in kv.items()}
 
-    def one_block(xx, slot_p, leaves, kind):
-        """One attention block against its pool leaves (per-repeat slices:
-        [hbm_pages|n_logical, page, KV, D]).  Returns (xx, updated leaves
-        + this layer's page mass)."""
+    def _block_tail(xx, slot_p, kind):
+        """Post-core residual stack shared by every geometry: cross-attn
+        conditioning, MoE / MLP."""
+        if kind.xattn and cond is not None:
+            hx = L.rms_norm(xx, slot_p["norm_x"])
+            cpos = jnp.arange(cond.shape[1])[None]
+            cmask = jnp.ones((1, 1, cond.shape[1]), bool)
+            o2, _ = L.attention_apply(slot_p["xattn"], cfg, hx, cond,
+                                      cur_pos[:, None], cmask,
+                                      kv_positions=cpos, use_rope=False)
+            xx = xx + o2
+        if kind.moe:
+            h2 = L.rms_norm(xx, slot_p["norm2"])
+            o2, _ = M.moe_apply(slot_p["moe"], cfg, h2, mesh)
+            xx = xx + o2
+        elif cfg.d_ff > 0 and "mlp" in slot_p:
+            h2 = L.rms_norm(xx, slot_p["norm2"])
+            xx = xx + L.mlp_apply(slot_p["mlp"], cfg, h2)
+        return shard(xx, ("batch", "seq", "embed"))
+
+    def attn_block(xx, slot_p, leaves, kind):
+        """Plain/local attention against its (k, v) pool leaves
+        (per-repeat slices: [hbm_pages|n_logical, page, KV, D])."""
         kh, vh, khost, vhost = leaves
         window = cfg.window_size if kind.base == "local" else 0
         h = L.rms_norm(xx, slot_p["norm1"])
@@ -791,33 +904,93 @@ def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
             softcap=cfg.softcap, return_mass=True, impl=impl)
         out = jnp.einsum("bshk,hkd->bsd", ctx[:, None],
                          slot_p["attn"]["wo"].astype(xx.dtype))
-        xx = xx + out
-        if kind.xattn and cond is not None:
-            hx = L.rms_norm(xx, slot_p["norm_x"])
-            cpos = jnp.arange(cond.shape[1])[None]
-            cmask = jnp.ones((1, 1, cond.shape[1]), bool)
-            o2, _ = L.attention_apply(slot_p["xattn"], cfg, hx, cond,
-                                      cur_pos[:, None], cmask,
-                                      kv_positions=cpos, use_rope=False)
-            xx = xx + o2
-        if kind.moe:
-            h2 = L.rms_norm(xx, slot_p["norm2"])
-            o2, _ = M.moe_apply(slot_p["moe"], cfg, h2, mesh)
-            xx = xx + o2
-        elif cfg.d_ff > 0 and "mlp" in slot_p:
-            h2 = L.rms_norm(xx, slot_p["norm2"])
-            xx = xx + L.mlp_apply(slot_p["mlp"], cfg, h2)
-        xx = shard(xx, ("batch", "seq", "embed"))
+        xx = _block_tail(xx + out, slot_p, kind)
         return xx, (kh, vh, khost, vhost, mass)
+
+    def mla_block(xx, slot_p, leaves, kind):
+        """Absorbed-matrix MLA against its compressed (ckv, krope) pool
+        leaves (per-repeat slices: [hbm_pages|n_logical, page, R|K]) --
+        the paged analogue of ``layers.mla_decode``."""
+        ckvh, krh, ckvhost, krhost = leaves
+        m = cfg.mla
+        p = slot_p["attn"]
+        h = L.rms_norm(xx, slot_p["norm1"])
+        cq = L.rms_norm(h @ p["w_dq"].astype(h.dtype), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(h.dtype))
+        q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+        q_rope = L.rope(q_rope, cur_pos[:, None], cfg.rope_theta)
+        c_new = L.rms_norm(h @ p["w_dkv"].astype(h.dtype), p["kv_norm"])
+        kr_new = L.rope((h @ p["w_kr"].astype(h.dtype))[:, :, None, :],
+                        cur_pos[:, None], cfg.rope_theta)[:, :, 0, :]
+        c1 = c_new[:, 0].astype(ckvh.dtype)
+        r1 = kr_new[:, 0].astype(krh.dtype)
+        ckvh = ckvh.at[wslot, off].set(c1, mode="drop")
+        krh = krh.at[wslot, off].set(r1, mode="drop")
+        ckvhost = ckvhost.at[wgid, off].set(c1, mode="drop")
+        krhost = krhost.at[wgid, off].set(r1, mode="drop")
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope,
+                           p["w_uk"].astype(h.dtype))
+        scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+        ctx, mass = ops.paged_attention_mla(
+            q_abs[:, 0], q_rope[:, 0], ckvh, krh, tables, lengths,
+            scale=scale, return_mass=True, impl=impl)
+        out = jnp.einsum("bshr,rhk->bshk", ctx[:, None],
+                         p["w_uv"].astype(xx.dtype))
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(xx.dtype))
+        xx = _block_tail(xx + out, slot_p, kind)
+        return xx, (ckvh, krh, ckvhost, krhost, mass)
+
+    def state_block(xx, slot_p, leaves, kind):
+        """Recurrent cell against its packed state page (per-repeat
+        slices: [hbm_pages|n_logical, state_dim]).  The cell state lives
+        in the pool like any page: read from the HBM slot, step, write
+        back through both tiers."""
+        sth, sthost = leaves
+        h = L.rms_norm(xx, slot_p["norm1"])
+        proto = _zero_state(cfg, kind, b)
+        state = unpack_state(sth[srd], proto)
+        step = {"mlstm": R.mlstm_step, "slstm": R.slstm_step,
+                "rglru": R.rglru_step}[kind.base]
+        out, new_state = step(slot_p["cell"], cfg, h, state)
+        flat = pack_state(new_state).astype(sth.dtype)
+        sth = sth.at[swslot].set(flat, mode="drop")
+        sthost = sthost.at[swgid].set(flat, mode="drop")
+        xx = _block_tail(xx + out, slot_p, kind)
+        return xx, (sth, sthost, smass)
+
+    def slot_leaves(kind, li):
+        if kind.is_attention and kind.mla:
+            return (kv["ckv_hbm"][li], kv["krope_hbm"][li],
+                    kv["ckv_host"][li], kv["krope_host"][li])
+        if kind.is_attention:
+            return (kv["k_hbm"][li], kv["v_hbm"][li],
+                    kv["k_host"][li], kv["v_host"][li])
+        return (kv["state_hbm"][li], kv["state_host"][li])
+
+    def store_leaves(kind, li, upd):
+        if kind.is_attention and kind.mla:
+            (new_kv["ckv_hbm"][li], new_kv["krope_hbm"][li],
+             new_kv["ckv_host"][li], new_kv["krope_host"][li]) = upd[:-1]
+        elif kind.is_attention:
+            (new_kv["k_hbm"][li], new_kv["v_hbm"][li],
+             new_kv["k_host"][li], new_kv["v_host"][li]) = upd[:-1]
+        else:
+            new_kv["state_hbm"][li], new_kv["state_host"][li] = upd[:-1]
+        return upd[-1]
+
+    def one_block(xx, slot_p, leaves, kind):
+        if kind.is_attention and kind.mla:
+            return mla_block(xx, slot_p, leaves, kind)
+        if kind.is_attention:
+            return attn_block(xx, slot_p, leaves, kind)
+        return state_block(xx, slot_p, leaves, kind)
 
     li = 0
     for si, (pattern, repeats) in enumerate(cfg.segments):
         kinds = [parse_kind(s_) for s_ in pattern]
         slot_params = params["segments"][si]
         nslots = len(kinds)
-        seg_leaves = [(kv["k_hbm"][li + j], kv["v_hbm"][li + j],
-                       kv["k_host"][li + j], kv["v_host"][li + j])
-                      for j in range(nslots)]
+        seg_leaves = [slot_leaves(kinds[j], li + j) for j in range(nslots)]
 
         # execution order matches decode_step: the whole pattern runs per
         # repeat (slots inner, repeats outer)
@@ -841,11 +1014,7 @@ def _paged_decode_core(params, cfg: ModelConfig, kv, tables, gid_tables,
         else:
             x, stacked = jax.lax.scan(body, x, (slot_params, seg_leaves))
         for j in range(nslots):
-            kh, vh, khost, vhost, mass = stacked[j]
-            new_kv["k_hbm"][li + j] = kh
-            new_kv["v_hbm"][li + j] = vh
-            new_kv["k_host"][li + j] = khost
-            new_kv["v_host"][li + j] = vhost
+            mass = store_leaves(kinds[j], li + j, stacked[j])
             mass_sum = mass_sum + mass.sum(axis=0)
             n_layers += repeats
         li += nslots
@@ -872,8 +1041,8 @@ def _sample_row(logits_row, key, temperature):
 def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
                       tokens, cur_pos, keys, iters, emitted, max_new,
                       eos_ids, temps, *, n_steps: int, page_size: int,
-                      impl: str = "reference", cond=None, mesh=None,
-                      shard=_IDENT):
+                      impl: str = "reference", cond=None, state_cols=None,
+                      mesh=None, shard=_IDENT):
     """Up to ``n_steps`` fully-paged decode steps in ONE device launch.
 
     A ``jax.lax.scan`` drives ``_paged_decode_core`` with on-device
@@ -903,9 +1072,6 @@ def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
     the scheduler needs to retire finished requests and feed the monitor
     one merged mass per period.
     """
-    if not paged_supported(cfg):
-        raise ValueError(f"{cfg.name}: fully-paged decode needs all-"
-                         "attention (non-MLA) layers and prefix_len == 0")
     b = tokens.shape[0]
     n_row_pages = tables.shape[1]
 
@@ -915,8 +1081,8 @@ def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
         cur = jnp.where(alive, pos, -1)
         logits, kv, mass = _paged_decode_core(
             params, cfg, kv, tables, gid_tables, tok, cur,
-            page_size=page_size, impl=impl, cond=cond, mesh=mesh,
-            shard=shard)
+            page_size=page_size, impl=impl, cond=cond,
+            state_cols=state_cols, mesh=mesh, shard=shard)
         mass_sum = mass_sum + mass            # core zeroes dead rows
         alive_steps = alive_steps + alive.astype(jnp.int32)
         ks2 = jax.vmap(jax.random.fold_in)(ks, it)

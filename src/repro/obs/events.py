@@ -81,8 +81,15 @@ _ALL = [
         ("manager", "step", "period", "promoted", "evicted", "pages_moved",
          "cost"),
         "one tiering boundary: pages promoted into HBM, lazily evicted, "
-        "total pages of data moved (2x promotions: k+v) and the modeled "
+        "total pages of data moved (promotions x the geometry's leaf "
+        "planes: k+v, ckv+krope, state) and the modeled "
         "migration+wakeup cost"),
+    # -- pool: the shared slot pool (step domain) ----------------------------
+    _ev("pool.attach",
+        ("layers", "leaves", "planes"),
+        "per-geometry cache leaves attached to a SharedPagedPools: layer "
+        "count, the leaf-name set (k,v / ckv,krope / state), and how many "
+        "planes one page migration moves"),
     # -- serve: the continuous-batching scheduler (wall clock) ---------------
     _ev("serve.admit",
         ("step", "joiners", "pages", "queue_depth", "wall_ms"),

@@ -10,11 +10,14 @@ in-flight requests and feeds online Cori from the merged traffic.
     request's KV occupies whole bucket-rounded page runs of the shared
     pool, so joins are page-aligned by construction), decode runs over
     the whole request set, and requests retire on EOS or length,
-    returning their pages.  In **fully-paged mode** (the default whenever
-    the architecture supports it) the shared pool is the ONLY KV store:
-    every attention layer decodes through ``kernels.paged_attention``
-    over the pool's ``slot_of`` tables, and the per-page attention masses
-    feeding the tuner come from ALL layers of that same decode step.
+    returning their pages.  In **fully-paged mode** (the default) the
+    shared pool is the ONLY state store for EVERY cache geometry:
+    plain/local attention gathers (k, v) token pages, MLA gathers
+    compressed (ckv, krope) pages, recurrent cells read/write one packed
+    state page per request, prefix architectures map shared read-only
+    prefix pages prefilled once -- all through the pool's ``slot_of``
+    tables, and the per-page masses feeding the tuner come from ALL
+    state-bearing layers of that same decode step.
   * ``TrafficScheduler`` -- the model-free twin for traffic simulation:
     each request is a synthetic per-step page-mass pattern
     (``repro.memtier.workload``), so thousands of scheduler steps replay
@@ -201,9 +204,14 @@ class Request:
     key: Optional[jax.Array] = None    # defaults to PRNGKey(0), as generate()
     # -- runtime state (owned by the batcher) --
     row: int = -1
-    gids: Optional[np.ndarray] = None
+    gids: Optional[np.ndarray] = None  # pages the request OWNS (kv + state)
     n_pages: int = 0                   # exact page footprint
     n_alloc: int = 0                   # bucket-rounded pages actually held
+    # paged mode: the pages the request's table maps (shared prefix pages
+    # + own kv pages + state page) and their columns in the mass rows --
+    # a superset of ``gids``: shared pages are mapped, never owned
+    table_gids: Optional[np.ndarray] = None
+    mass_cols: Optional[np.ndarray] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     _key: Optional[jax.Array] = None
@@ -228,19 +236,26 @@ class ContinuousBatcher:
 
     Decode data paths:
 
-    * **Fully paged** (``paged=True``, the default whenever
-      ``model.paged_supported(cfg)`` and a monitor is attached): the
-      shared pool is the ONLY KV store.  Each request's KV occupies a
-      bucket-rounded run of global pages (``memtier.bucket_pages``), and
-      every attention layer decodes through ``kernels.paged_attention``
-      over the pool's ``slot_of`` tables (``model.decode_step_paged``).
-      There is no dense per-row ``max_len`` cache at all; peak cache
-      memory is the sum of the in-flight bucket-rounded footprints.  The
-      per-page masses feeding the tuner come from ALL attention layers
-      of the decode step itself (head-normalised, layer-averaged,
-      emitted by the kernel's own softmax accumulators) -- the true
-      aggregate traffic, not a one-layer sample.  Before each step,
-      every page the attention can touch is demand-fetched into HBM
+    * **Fully paged** (``paged=True``, the default whenever a monitor is
+      attached -- every registered cache geometry is expressible on the
+      shared slot pool): the shared pool is the ONLY state store.  Each
+      request's token pages occupy a bucket-rounded run of global pages
+      (``memtier.bucket_pages``); every state-bearing layer decodes
+      through the pool's ``slot_of`` tables (``model.decode_step_paged``)
+      with its own leaf geometry -- (k, v) token rows for plain/local
+      attention, compressed (ckv, krope) rows for MLA, one packed state
+      page per request for recurrent cells (mapped at a fixed table
+      column past every token position, so attention never reads it),
+      and ``prefix_len`` architectures map shared read-only prefix pages
+      that are prefilled ONCE at batcher construction instead of
+      re-prefilled per admission.  There is no dense per-row ``max_len``
+      cache at all; peak cache memory is the sum of the in-flight
+      bucket-rounded footprints plus the one shared prefix run.  The
+      per-page masses feeding the tuner come from ALL state-bearing
+      layers of the decode step itself (head-normalised attention mass,
+      a unit state-page touch per recurrent layer, layer-averaged) --
+      the true aggregate traffic, not a one-layer sample.  Before each
+      step, every page the decode can touch is demand-fetched into HBM
       (charged as misses); admission is gated so the in-flight exact
       footprint fits the HBM slot pool.
 
@@ -254,12 +269,16 @@ class ContinuousBatcher:
       baseline); ``macro_steps`` pins a fixed macro length instead of
       tracking the manager's live Cori period.
 
-    * **Dense** (``paged=False``; the fallback for MLA / recurrent /
-      prefix architectures): ``max_active`` rows share one packed cache
-      of ``max_len`` positions, the monitor layer's masses are
-      recomputed per step (``engine.make_monitor``) and, with
-      ``mirror_pages=True``, that layer's pages are write-through
-      mirrored into the shared pool for ``paged_context``.
+    * **Dense** (``paged=False``; the measured baseline): ``max_active``
+      rows share one packed cache of ``max_len`` positions, the monitor
+      layer's masses are recomputed per step (``engine.make_monitor``)
+      and, with ``mirror_pages=True``, that layer's pages are
+      write-through mirrored into the shared pool for ``paged_context``.
+
+    ``cond`` ([T, d] or [1, T, d]) is the serving session's shared
+    cross-attention conditioning (musicgen-style archs); ``extra_embeds``
+    ([prefix_len, d] or [1, prefix_len, d]) is the shared prefix, required
+    whenever ``cfg.prefix_len > 0``.
     """
 
     def __init__(self, params, cfg, *, max_active: int = 4,
@@ -269,19 +288,49 @@ class ContinuousBatcher:
                  paged: Optional[bool] = None,
                  paged_impl: str = "reference",
                  macro: Optional[bool] = None,
-                 macro_steps: Optional[int] = None):
+                 macro_steps: Optional[int] = None,
+                 cond=None, extra_embeds=None):
         self.params, self.cfg = params, cfg
         self.page_size = page_size
         self.max_len = -(-max_len // page_size) * page_size
         self.max_active = max_active
         self.prefix = cfg.prefix_len or 0
         self.monitor = monitor
-        self.n_row_pages = self.max_len // page_size
+        self._has_state = mdl.has_state_pages(cfg)
+        self._has_attn = mdl.has_attention(cfg)
+        self._state_extra = 1 if self._has_state else 0
+        # one extra table column holds the state page, PAST every token
+        # position (col * page_size >= any length), so attention kernels
+        # can never gather it
+        self.n_row_pages = self.max_len // page_size + self._state_extra
         can_page = monitor is not None and mdl.paged_supported(cfg)
         self.paged = can_page if paged is None else bool(paged)
         if self.paged and not can_page:
-            raise ValueError("fully-paged decode needs a TrafficMonitor and "
-                             f"an all-attention config ({cfg.name})")
+            raise ValueError("fully-paged decode needs a TrafficMonitor "
+                             f"({cfg.name})")
+        if self.prefix % page_size:
+            raise ValueError(f"prefix_len {self.prefix} must be page-"
+                             f"aligned (page_size {page_size}) so request "
+                             "pages start on a page boundary")
+        if self.prefix and self._has_state:
+            raise ValueError("shared prefix pages cannot seed recurrent "
+                             "state (no such architecture is registered)")
+        self._prefix_pages = self.prefix // page_size
+        if self.prefix and extra_embeds is None:
+            raise ValueError(f"{cfg.name}: serving needs the shared prefix "
+                             "embeddings (extra_embeds [prefix_len, "
+                             "d_model])")
+        self._ex = None
+        if extra_embeds is not None:
+            ex = jnp.asarray(extra_embeds)
+            self._ex = ex[None] if ex.ndim == 2 else ex
+        self._cond = None
+        self._cond_rows = None
+        if cond is not None:
+            c = jnp.asarray(cond)
+            self._cond = c[None] if c.ndim == 2 else c
+            self._cond_rows = jnp.broadcast_to(
+                self._cond, (max_active,) + self._cond.shape[1:])
         # macro-step decode: the default hot loop whenever fully paged --
         # the host wakes once per movement period (``macro_steps`` pins a
         # fixed macro length; None tracks the manager's live Cori period).
@@ -321,14 +370,17 @@ class ContinuousBatcher:
         if self.paged:
             pools = monitor.pools
             if pools.kv_layers is None:
-                pools.attach_layered_kv(
-                    [r for (_, _, r, _, _) in mdl.attn_slot_meta(cfg)],
-                    page_size=page_size, kv_heads=cfg.num_kv_heads,
-                    head_dim=cfg.head_dim, dtype=jnp.float32)
+                pools.attach_layered(mdl.slot_leaf_specs(cfg, page_size),
+                                     dtype=jnp.float32)
             self.cache = None
             self._hbm_need = 0     # exact pages the in-flight set can touch
             self._gid_tables = np.full((max_active, self.n_row_pages), -1,
                                        np.int32)
+            # recurrent archs: every row's state page sits at the fixed
+            # last table column (see n_row_pages above)
+            self._state_cols = (jnp.full((max_active,), self.n_row_pages - 1,
+                                         jnp.int32)
+                                if self._has_state else None)
             # the kv pytree is dead after the call (set_kv replaces it):
             # donate it so XLA updates the pool buffers in place instead
             # of copying the whole layered store every step
@@ -339,29 +391,71 @@ class ContinuousBatcher:
             # one compiled macro per scan length (bounded: lengths are the
             # tuner's period ladder, pow2-capped by the remaining work)
             self._macro_fns: Dict[int, Callable] = {}
+            # shared read-only prefix: allocated + prefilled ONCE; every
+            # request's table maps these pages, admission never
+            # re-prefills the prefix
+            self._prefix_gids: Optional[np.ndarray] = None
+            if self._prefix_pages:
+                g = pools.alloc(self._prefix_pages, -1)
+                if g is None:
+                    raise ValueError(
+                        f"the logical space ({pools.n_logical}) cannot hold "
+                        f"the {self._prefix_pages} shared prefix pages")
+                self._prefix_gids = g
+                self._hbm_need += self._prefix_pages
+                self._prefill_prefix_pages()
         else:
             # prefill produces float32 caches on this substrate; the packed
             # cache must match or row writes would silently downcast
             self.cache = mdl.init_cache(cfg, max_active, self.max_len,
                                         dtype=jnp.float32)
             self._step_fn = jax.jit(
-                lambda c, t, p: mdl.decode_step(params, cfg, c, t, p))
+                lambda c, t, p, cond=None: mdl.decode_step(
+                    params, cfg, c, t, p, cond=cond))
         self._mon_fn = (E.make_monitor(params, cfg, page_size,
                                        self.n_row_pages)
                         if monitor is not None and not self.paged else None)
-        if self.monitor is not None:
+        # the monitor SLOT only exists for architectures with a
+        # full-attention layer; the fully-paged path monitors every layer
+        # itself and only needs the slot for ``paged_context`` probes
+        try:
             self._si, self._sj = E.monitor_slot(cfg)
+        except ValueError:
+            self._si = self._sj = None
+        if self.mirror_pages and self._si is None:
+            raise ValueError(f"{cfg.name}: mirror_pages needs a "
+                             "full-attention monitor layer")
 
     # -- admission -----------------------------------------------------------
+    def _pages_kv_exact(self, req: Request) -> int:
+        """Exact token pages the request's own positions span.  In paged
+        mode the shared prefix pages are NOT the request's (they are
+        mapped, not owned, and the prefix is page-aligned so its own
+        tokens start on a page boundary); pure-recurrent architectures
+        keep no token pages at all."""
+        if not self.paged:
+            return -(-(self.prefix + req.total_len) // self.page_size)
+        if not self._has_attn:
+            return 0
+        return -(-req.total_len // self.page_size)
+
     def _pages_exact(self, req: Request) -> int:
-        return -(-(self.prefix + req.total_len) // self.page_size)
+        """Exact own-page footprint: token pages plus the state page."""
+        return self._pages_kv_exact(req) + (self._state_extra if self.paged
+                                            else 0)
 
     def _pages_alloc(self, req: Request) -> int:
-        """Bucket-rounded allocation size (power-of-two pages, capped at
-        one row): what the request actually holds in the shared pool."""
+        """Bucket-rounded allocation size (power-of-two token pages,
+        capped at one row, plus the un-bucketed state page): what the
+        request actually holds in the shared pool."""
         if self.monitor is None:
             return 0
-        return bucket_pages(self._pages_exact(req), cap=self.n_row_pages)
+        if not self.paged:
+            return bucket_pages(self._pages_exact(req), cap=self.n_row_pages)
+        kv_exact = self._pages_kv_exact(req)
+        cap = self.max_len // self.page_size - self._prefix_pages
+        kv_alloc = bucket_pages(kv_exact, cap=cap) if kv_exact else 0
+        return kv_alloc + self._state_extra
 
     def submit(self, req: Request) -> None:
         if self.prefix + req.total_len > self.max_len:
@@ -370,16 +464,18 @@ class ContinuousBatcher:
                              f"cache rows hold {self.max_len}")
         if self.monitor is not None:
             n_pages = self._pages_alloc(req)
-            if n_pages > self.monitor.pools.n_logical:
+            avail = self.monitor.pools.n_logical - self._prefix_pages
+            if n_pages > avail:
                 # would head-of-line-block the queue forever: alloc can
                 # never succeed, not even with the pool fully drained
                 raise ValueError(
                     f"request {req.rid} needs {n_pages} pages, the logical "
-                    f"space holds {self.monitor.pools.n_logical}")
-            if self.paged and \
-                    self._pages_exact(req) > self.monitor.pools.hbm_pages:
+                    f"space holds {avail} beyond the shared prefix")
+            if self.paged and (self._prefix_pages + self._pages_exact(req)
+                               > self.monitor.pools.hbm_pages):
                 raise ValueError(
-                    f"request {req.rid} touches {self._pages_exact(req)} "
+                    f"request {req.rid} touches "
+                    f"{self._prefix_pages + self._pages_exact(req)} "
                     f"pages, the HBM slot pool holds "
                     f"{self.monitor.pools.hbm_pages}: it can never decode "
                     "fully paged")
@@ -405,6 +501,7 @@ class ContinuousBatcher:
             req.n_alloc = n_alloc
             if self.paged:
                 self._hbm_need += n_exact
+                self._map_row(req)
             batch.append(req)
         if not batch:
             return []
@@ -418,6 +515,69 @@ class ContinuousBatcher:
             r.count("serve.admitted", len(batch))
             r.gauge("serve.queue_depth", len(self.queue))
         return emitted
+
+    def _map_row(self, req: Request) -> None:
+        """Build the request's logical page-table row: shared prefix
+        pages first, its own token-page run next (bucket tail included),
+        the state page at the fixed last column.  Also records the
+        (gids, mass columns) the monitor merge reads -- exact pages only,
+        so bucket-tail slack never accrues mass."""
+        pp = self._prefix_pages
+        kv_alloc = req.n_alloc - self._state_extra
+        kv_own = req.gids[:kv_alloc]
+        row = np.full(self.n_row_pages, -1, np.int32)
+        if pp:
+            row[:pp] = self._prefix_gids
+        row[pp: pp + kv_alloc] = kv_own
+        parts, cols = [], []
+        if pp:
+            parts.append(np.asarray(self._prefix_gids, np.int64))
+            cols.append(np.arange(pp))
+        kv_exact = self._pages_kv_exact(req)
+        if kv_exact:
+            parts.append(np.asarray(kv_own[:kv_exact], np.int64))
+            cols.append(pp + np.arange(kv_exact))
+        if self._state_extra:
+            row[-1] = req.gids[-1]
+            parts.append(np.asarray(req.gids[-1:], np.int64))
+            cols.append(np.asarray([self.n_row_pages - 1]))
+        self._gid_tables[req.row] = row
+        req.table_gids = np.concatenate(parts)
+        req.mass_cols = np.concatenate(cols).astype(np.int64)
+
+    def _slot_table(self, rows: Sequence[int]) -> np.ndarray:
+        """Physical HBM slot tables for the given rows, derived from the
+        logical ``_gid_tables`` (rebuilt per upload: tiering may have
+        re-slotted any resident page)."""
+        pools = self.monitor.pools
+        tables = np.full((self.max_active, self.n_row_pages), -1, np.int32)
+        for row in rows:
+            g = self._gid_tables[row]
+            m = g >= 0
+            tables[row, m] = pools.table(g[m])
+        return tables
+
+    def _need(self, pos_np: np.ndarray, horizon: int,
+              per_row: Optional[Dict[int, int]] = None) -> np.ndarray:
+        """Every page the next ``horizon`` decode steps can touch: the
+        shared prefix run, each row's token pages through its horizon
+        (incl. the write pages) and its state page."""
+        need: List[np.ndarray] = []
+        if self._prefix_gids is not None:
+            need.append(np.asarray(self._prefix_gids, np.int64))
+        pp = self._prefix_pages
+        for row, req in self.active.items():
+            h = per_row.get(row, horizon) if per_row else horizon
+            if self._has_attn:
+                n_cols = -(-(int(pos_np[row]) + h) // self.page_size)
+                kv_own = req.gids[: req.n_alloc - self._state_extra]
+                need.append(np.asarray(kv_own[: max(0, n_cols - pp)],
+                                       np.int64))
+            if self._state_extra:
+                need.append(np.asarray(req.gids[-1:], np.int64))
+        if not need:
+            return np.asarray([], np.int64)
+        return np.concatenate(need)
 
     def _prefill(self, batch: List[Request]) -> List[Tuple[int, int]]:
         """Prefill a step's joiners as one packed forward pass, seed their
@@ -435,9 +595,18 @@ class ContinuousBatcher:
             plens_p = np.ones((jp,), np.int32)
             for i, r in enumerate(batch):
                 toks[i, : plens[i]] = r.prompt
-                plens_p[i] = plens[i]
+                # lengths INCLUDE the shared prefix: the last valid
+                # position of row i sits at prefix + plen - 1
+                plens_p[i] = self.prefix + plens[i]
+            kw = {}
+            if self._cond is not None:
+                kw["cond"] = jnp.broadcast_to(
+                    self._cond, (jp,) + self._cond.shape[1:])
+            if self._ex is not None:
+                kw["extra_embeds"] = jnp.broadcast_to(
+                    self._ex, (jp,) + self._ex.shape[1:])
             logits_b, cache_b = self._prefill_fn(
-                jnp.asarray(toks), jnp.asarray(plens_p))
+                jnp.asarray(toks), jnp.asarray(plens_p), **kw)
         else:               # recurrent state: one request at a time
             logits_b, cache_b = None, None
 
@@ -454,18 +623,24 @@ class ContinuousBatcher:
                 if self.paged:
                     pass                 # pages already written (batched)
                 else:
-                    one = mdl.row_cache_from_batched(cache_b, self.cfg, bi,
-                                                     plen, self.max_len)
+                    one = mdl.row_cache_from_batched(
+                        cache_b, self.cfg, bi, self.prefix + plen,
+                        self.max_len)
                     self.cache = jax.tree.map(
                         lambda full, o: full.at[:, row].set(o),
                         self.cache, one)
             else:
                 prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, cache1 = mdl.prefill(self.params, self.cfg, prompt)
-                cache1 = mdl.pad_cache(cache1, self.cfg, self.max_len)
-                self.cache = jax.tree.map(
-                    lambda full, o: full.at[:, row].set(o[:, 0]),
-                    self.cache, cache1)
+                logits, cache1 = mdl.prefill(self.params, self.cfg, prompt,
+                                             cond=self._cond,
+                                             extra_embeds=self._ex)
+                if self.paged:
+                    self._write_prefill_pages_row(cache1, req, plen)
+                else:
+                    cache1 = mdl.pad_cache(cache1, self.cfg, self.max_len)
+                    self.cache = jax.tree.map(
+                        lambda full, o: full.at[:, row].set(o[:, 0]),
+                        self.cache, cache1)
             req._key = (req.key if req.key is not None
                         else jax.random.PRNGKey(0))
             tok = E._sample(logits[:, 0], req._key, req.temperature)
@@ -482,16 +657,32 @@ class ContinuousBatcher:
                 self._retire(req)
         return emitted
 
+    def _prefill_leaves(self, cache, meta, start: int):
+        """{leaf_name: per-slot cache rows} for ``write_pages_batched``,
+        sliced from absolute position ``start`` (the shared prefix region
+        is written once at construction, not per admission)."""
+        leaves: Dict[str, List] = {}
+        for li, (si, j, _, _, kind) in enumerate(meta):
+            if not kind.is_attention:
+                continue
+            e = cache["segments"][si][j]
+            for name in (("ckv", "krope") if kind.mla else ("k", "v")):
+                leaves.setdefault(name, [None] * len(meta))[li] = \
+                    e[name][:, :, start:]
+        return leaves
+
     def _write_prefill_pages_batched(self, cache_b, batch: List[Request],
                                      plens: List[int]) -> None:
-        """Scatter a whole admission's prefilled KV (every joiner, every
-        attention layer, host + HBM tiers) into the shared pool in ONE
-        jitted gather/scatter (``memtier.write_pages_batched``).  Slots
-        are assigned bookkeeping-only first (initial placement, not
+        """Scatter a whole admission's prefilled cache (every joiner,
+        every geometry leaf, host + HBM tiers) into the shared pool in
+        ONE jitted gather/scatter (``memtier.write_pages_batched``).
+        Slots are assigned bookkeeping-only first (initial placement, not
         charged as misses) since the scatter overwrites both tiers --
         the prefill bytes never take the host detour."""
         pools = self.monitor.pools
         ps = self.page_size
+        # own token pages only: the prefix is page-aligned, so each
+        # prompt's pages start at cache position ``prefix``
         ns = [-(-p // ps) for p in plens]
         # both scatter dims pow2-bucketed (matching the prefill batch):
         # padded joiner rows / tail pages carry PAGE_DROP and vanish
@@ -508,15 +699,80 @@ class ContinuousBatcher:
         for i, n in enumerate(ns):
             slots_m[i, :n] = slots_flat[o: o + n]
             o += n
-        meta = mdl.attn_slot_meta(self.cfg)
-        ks = [cache_b["segments"][si][j]["k"] for (si, j, *_) in meta]
-        vs = [cache_b["segments"][si][j]["v"] for (si, j, *_) in meta]
+        leaves = self._prefill_leaves(cache_b, mdl.state_slot_meta(self.cfg),
+                                      self.prefix)
         pools.set_kv(write_pages_batched(
-            pools.kv_view(), ks, vs, jnp.asarray(gids_m),
+            pools.kv_view(), leaves, jnp.asarray(gids_m),
             jnp.asarray(slots_m)))
-        for req in batch:
-            self._gid_tables[req.row, : req.n_alloc] = req.gids
-            self._gid_tables[req.row, req.n_alloc:] = -1
+
+    def _write_prefill_pages_row(self, cache1, req: Request,
+                                 plen: int) -> None:
+        """Write ONE request's per-request prefill into the shared pool:
+        the non-batched admission path of recurrent architectures.  Token
+        pages scatter position-keyed (page = pos // ps, offset = pos %
+        ps), which lands window-ring cache layouts correctly -- a clipped
+        ring holds exactly the unmasked last-window positions, each
+        tagged with its absolute position.  Recurrent slots pack their
+        final cell state into the request's state page."""
+        pools = self.monitor.pools
+        ps = self.page_size
+        kv_exact = self._pages_kv_exact(req)
+        own = req.gids[: req.n_alloc - self._state_extra]
+        touched = np.concatenate([own[:kv_exact],
+                                  req.gids[-1:] if self._state_extra
+                                  else np.asarray([], np.int64)])
+        slots = pools.assign_slots(touched)
+        kv_slots = slots[:kv_exact]
+        kv = pools.kv_view()
+        drop = int(PAGE_DROP)
+        for li, (si, j, r, _, kind) in enumerate(
+                mdl.state_slot_meta(self.cfg)):
+            e = cache1["segments"][si][j]
+            if kind.is_attention:
+                pos = np.asarray(e["pos"][0, 0])      # same across repeats
+                valid = pos >= 0
+                page = np.clip(np.where(valid, pos, 0) // ps, 0,
+                               max(kv_exact - 1, 0))
+                rows_s = np.where(valid, kv_slots[page], drop)
+                rows_g = np.where(valid, own[:kv_exact][page], drop)
+                offs = np.where(valid, pos % ps, 0)
+                for name in (("ckv", "krope") if kind.mla else ("k", "v")):
+                    arr = e[name][:, 0]               # [R, T, ...]
+                    kv[f"{name}_hbm"][li] = kv[f"{name}_hbm"][li].at[
+                        :, rows_s, offs].set(arr, mode="drop")
+                    kv[f"{name}_host"][li] = kv[f"{name}_host"][li].at[
+                        :, rows_g, offs].set(arr, mode="drop")
+            else:
+                flat = jnp.stack([mdl.pack_state(
+                    jax.tree.map(lambda a: a[rr], e))[0] for rr in range(r)])
+                kv["state_hbm"][li] = kv["state_hbm"][li].at[
+                    :, int(slots[-1])].set(flat)
+                kv["state_host"][li] = kv["state_host"][li].at[
+                    :, int(req.gids[-1])].set(flat)
+        pools.set_kv(kv)
+
+    def _prefill_prefix_pages(self) -> None:
+        """Prefill the shared read-only prefix ONCE and write its KV into
+        the shared pages every request's table maps.  Under the causal
+        mask the prefix positions attend only the prefix embeddings, so
+        one dummy-token prefill is exact for every future prompt --
+        admission maps these pages instead of re-prefilling the prefix."""
+        pools = self.monitor.pools
+        dummy = jnp.zeros((1, 1), jnp.int32)
+        _, cache1 = mdl.prefill(self.params, self.cfg, dummy,
+                                extra_embeds=self._ex, cond=self._cond)
+        slots = pools.assign_slots(self._prefix_gids)
+        meta = mdl.state_slot_meta(self.cfg)
+        leaves: Dict[str, List] = {}
+        for li, (si, j, _, _, kind) in enumerate(meta):
+            e = cache1["segments"][si][j]
+            for name in (("ckv", "krope") if kind.mla else ("k", "v")):
+                leaves.setdefault(name, [None] * len(meta))[li] = \
+                    e[name][:, :, : self.prefix]
+        pools.set_kv(write_pages_batched(
+            pools.kv_view(), leaves,
+            jnp.asarray(self._prefix_gids, jnp.int32)[None],
+            jnp.asarray(slots, jnp.int32)[None]))
 
     # -- the per-step scheduler loop -----------------------------------------
     def step(self) -> List[Tuple[int, int]]:
@@ -548,7 +804,8 @@ class ContinuousBatcher:
             self.monitor.on_step(merged, n_active=len(self.active))
 
         pos_before = np.asarray(self.pos)
-        logits, self.cache = self._step_fn(self.cache, self.tok, self.pos)
+        logits, self.cache = self._step_fn(self.cache, self.tok, self.pos,
+                                           self._cond_rows)
         self.pos = self.pos + 1
         new_tok = self.tok
         for row, req in list(self.active.items()):
@@ -576,32 +833,29 @@ class ContinuousBatcher:
         mgr = self.monitor.manager
         pos_np = np.asarray(self.pos)
 
-        # every page this step's attention can touch (incl. the write
-        # page) must be HBM-resident; re-fetches after eviction are
-        # on-demand host reads and charged as misses
-        need: List[np.ndarray] = []
-        for req in self.active.values():
-            n = -(-(int(pos_np[req.row]) + 1) // self.page_size)
-            need.append(req.gids[:n])
-        fetched = pools.ensure_resident(np.concatenate(need))
+        # every page this step's decode can touch (shared prefix, token
+        # pages incl. the write page, the state page) must be
+        # HBM-resident; re-fetches after eviction are on-demand host
+        # reads and charged as misses
+        fetched = pools.ensure_resident(self._need(pos_np, 1))
         mgr.misses += fetched
         mgr.modeled_time += fetched * mgr.cfg.miss_penalty
 
         # page tables are rebuilt each step: tiering may have re-slotted
         # any resident page since the last one
-        tables = np.full((self.max_active, self.n_row_pages), -1, np.int32)
+        tables = self._slot_table(list(self.active))
         cur = np.full((self.max_active,), -1, np.int32)
-        for row, req in self.active.items():
-            tables[row, : req.n_alloc] = pools.table(req.gids)
+        for row in self.active:
             cur[row] = pos_np[row]
 
         logits, kv, masses = self._paged_fn(
             pools.kv_view(), jnp.asarray(tables),
-            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur))
+            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
+            cond=self._cond_rows, state_cols=self._state_cols)
         pools.set_kv(kv)
         masses = np.asarray(masses)
         merged = self.monitor.merge(
-            [(r.gids[: r.n_pages], masses[r.row, : r.n_pages])
+            [(r.table_gids, masses[r.row][r.mass_cols])
              for r in self.active.values()])
         self.monitor.on_step(merged, n_active=len(self.active))
 
@@ -661,22 +915,21 @@ class ContinuousBatcher:
         n_steps = max(1, min(1 << max(0, int(period).bit_length() - 1),
                              bucket_pages(max_rem)))
 
-        # every page the macro's attention can touch (through each row's
-        # horizon, incl. the write pages) must be HBM-resident up front:
-        # the device never calls home mid-macro.  Re-fetches after
-        # eviction are on-demand host reads, charged as misses inside
-        # the monitor feed below so the tuner's cost window sees them
-        # (they are the price of the current period).
-        need: List[np.ndarray] = []
-        for row, req in rows:
-            horizon = min(n_steps, req.max_new_tokens - len(req.tokens))
-            n = -(-(int(pos_np[row]) + horizon) // self.page_size)
-            need.append(req.gids[:n])
-        fetched = pools.ensure_resident(np.concatenate(need))
+        # every page the macro's decode can touch (through each row's
+        # horizon, incl. the write pages, the shared prefix and state
+        # pages) must be HBM-resident up front: the device never calls
+        # home mid-macro.  Re-fetches after eviction are on-demand host
+        # reads, charged as misses inside the monitor feed below so the
+        # tuner's cost window sees them (they are the price of the
+        # current period).
+        horizons = {row: min(n_steps, req.max_new_tokens - len(req.tokens))
+                    for row, req in rows}
+        fetched = pools.ensure_resident(
+            self._need(pos_np, n_steps, per_row=horizons))
 
         # page tables upload once per macro step: tiering only runs at
         # macro boundaries, so no page can re-slot mid-macro
-        tables = np.full((self.max_active, self.n_row_pages), -1, np.int32)
+        tables = self._slot_table([row for row, _ in rows])
         cur = np.full((self.max_active,), -1, np.int32)
         keys = np.zeros((self.max_active, 2), np.uint32)
         iters = np.zeros((self.max_active,), np.int32)
@@ -685,7 +938,6 @@ class ContinuousBatcher:
         eos = np.full((self.max_active,), -1, np.int32)
         temps = np.zeros((self.max_active,), np.float32)
         for row, req in rows:
-            tables[row, : req.n_alloc] = pools.table(req.gids)
             cur[row] = pos_np[row]
             keys[row] = np.asarray(req._key, np.uint32)
             iters[row] = req._i
@@ -700,7 +952,8 @@ class ContinuousBatcher:
             pools.kv_view(), jnp.asarray(tables),
             jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
             jnp.asarray(keys), jnp.asarray(iters), jnp.asarray(emitted_ct),
-            jnp.asarray(max_new), jnp.asarray(eos), jnp.asarray(temps))
+            jnp.asarray(max_new), jnp.asarray(eos), jnp.asarray(temps),
+            cond=self._cond_rows, state_cols=self._state_cols)
         pools.set_kv(kv)
 
         toks_np = np.asarray(toks)
@@ -719,8 +972,8 @@ class ContinuousBatcher:
         # in token-steps; the mean in-flight count normalises cost per
         # request as on the per-token path.
         merged = self.monitor.merge(
-            [(r.gids[: r.n_pages],
-              mass_sum[r.row, : r.n_pages]
+            [(r.table_gids,
+              mass_sum[r.row][r.mass_cols]
               / max(1, int(alive_steps[r.row])))
              for _, r in rows])
         dt = max(1, int(alive_steps.max()))
@@ -801,12 +1054,17 @@ class ContinuousBatcher:
             raise ValueError("paged_context needs fully-paged decode or "
                              "mirror_pages=True over physical pools: "
                              "otherwise the shared pool holds no KV data")
+        if self._si is None:
+            raise ValueError(f"{self.cfg.name}: no full-attention layer "
+                             "to probe with paged_context")
         req = next((r for r in self.active.values() if r.rid == rid), None)
         if req is None:
             raise KeyError(f"request {rid} is not in flight")
         length = int(np.asarray(self.pos)[req.row])
         n = -(-length // self.page_size)
-        gids = req.gids[:n]
+        # paged mode: pages covering positions [0, length) in table order
+        # (shared prefix first); dense-mirror mode: the request's own run
+        gids = req.table_gids[:n] if self.paged else req.gids[:n]
         pools = self.monitor.pools
         fetched = pools.ensure_resident(gids)
         # demand-fetched pages are on-demand host reads: charge them

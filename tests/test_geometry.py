@@ -1,0 +1,171 @@
+"""Config-wide differential parity matrix.
+
+Every architecture in ``repro.configs`` — full attention, windowed,
+MLA-compressed, recurrent/xLSTM state, conditioned cross-attention, and
+shared-prefix — must emit token-identical streams across four
+execution paths:
+
+  1. per-request ``engine.generate`` (the oracle),
+  2. the dense ContinuousBatcher (``paged=False``, contiguous cache),
+  3. the per-token paged batcher over ``SharedPagedPools``,
+  4. the macro-step paged batcher (device-resident multi-token launches).
+
+The workload bakes in the serving edge cases: staggered admission into
+a recycled row, temperature sampling with per-request keys, a mid-macro
+EOS retirement, and window rings (prompt + steps exceed the reduced
+sliding window so rings wrap).
+"""
+
+import numpy as np
+import pytest
+
+import repro.configs as C
+
+
+def _stack(cfg, *, n_logical=64, hbm=32, page=4):
+    from repro.memtier import cori
+    from repro.memtier.tiering import (SharedPagedPools, TierConfig,
+                                       TieringManager)
+    from repro.serve.sched import TrafficMonitor
+
+    pools = SharedPagedPools.create(n_logical, hbm, page_size=page)
+    mgr = TieringManager(n_logical, TierConfig(page_size=page,
+                                               hbm_pages=hbm,
+                                               period_steps=2))
+    tuner = cori.OnlineTuner(n_logical, default_period=2, profile_steps=8,
+                             trial_steps=4)
+    return TrafficMonitor(pools, mgr, tuner)
+
+
+def _workload(cfg, seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (6, 9, 5)]
+    keys = [jax.random.PRNGKey(10 + i) for i in range(3)]
+    steps = [6, 4, 7]
+    temps = [0.0, 0.7, 0.7]
+    cond = None
+    ex = None
+    if cfg.cond_dim:
+        cond = jax.random.normal(jax.random.PRNGKey(2),
+                                 (1, cfg.cond_len, cfg.cond_dim),
+                                 jnp.float32)
+    if cfg.prefix_len:
+        ex = jax.random.normal(jax.random.PRNGKey(3),
+                               (1, cfg.prefix_len, cfg.d_model),
+                               jnp.float32)
+    return prompts, keys, steps, temps, cond, ex
+
+
+def _run_batcher(params, cfg, prompts, keys, steps, temps, cond, ex, *,
+                 mode, eos_for=None, eos_id=None):
+    """Drive one batcher mode over the staggered workload; returns
+    ({rid: tokens}, streamed event list)."""
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    mon = None if mode == "dense" else _stack(cfg)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32, page_size=4,
+                          monitor=mon, paged=(mode != "dense"),
+                          macro=(mode == "macro"),
+                          macro_steps=3 if mode == "macro" else None,
+                          cond=cond, extra_embeds=ex)
+    assert b.paged == (mode != "dense")
+
+    def mk(i):
+        return Request(rid=i, prompt=prompts[i], max_new_tokens=steps[i],
+                       key=keys[i], temperature=temps[i],
+                       eos_id=eos_id if i == eos_for else None)
+
+    b.submit(mk(0))
+    b.submit(mk(1))
+    events = []
+    for t in range(60):
+        if t == 2:       # joins mid-flight, lands in a recycled row
+            b.submit(mk(2))
+        events.extend(b.step())
+        if t > 2 and not b.queue and not b.active:
+            break
+    assert not b.queue and not b.active, "workload did not drain"
+    if mon is not None:
+        shared = (cfg.prefix_len or 0) // 4
+        assert mon.pools.free_pages == mon.pools.n_logical - shared, \
+            "retirement must release every owned page (prefix stays mapped)"
+    return {r.rid: list(r.tokens) for r in b.completed}, events
+
+
+@pytest.mark.parametrize("name", C.ARCHS)
+def test_four_way_parity(name):
+    """generate == dense == per-token paged == macro, token for token,
+    for every architecture in the config registry."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as mdl
+    from repro.serve.engine import generate
+
+    cfg = C.reduced(name)
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    prompts, keys, steps, temps, cond, ex = _workload(cfg)
+
+    want = []
+    for i in range(3):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(prompts[i])[None],
+                                  steps=steps[i], temperature=temps[i],
+                                  key=keys[i], cond=cond,
+                                  extra_embeds=ex))[0].tolist()
+        want.append(ref)
+
+    for mode in ("dense", "paged", "macro"):
+        got, events = _run_batcher(params, cfg, prompts, keys, steps, temps,
+                                   cond, ex, mode=mode)
+        for i in range(3):
+            assert got[i] == want[i], \
+                f"{name}/{mode}: request {i} diverged from generate"
+            streamed = [tok for rid, tok in events if rid == i]
+            assert streamed == want[i], \
+                f"{name}/{mode}: stream for request {i} incomplete"
+
+    # mid-macro EOS: a later greedy token becomes EOS, landing inside a
+    # 3-token macro launch; the stream must truncate exactly there and
+    # release the row's pages (checked by _run_batcher's leak assert).
+    eos_idx = next((i for i in range(2, len(want[0]))
+                    if want[0][i] not in want[0][:i]), None)
+    if eos_idx is not None:
+        got, _ = _run_batcher(params, cfg, prompts, keys, steps, temps,
+                              cond, ex, mode="macro", eos_for=0,
+                              eos_id=want[0][eos_idx])
+        assert got[0] == want[0][:eos_idx + 1], \
+            f"{name}: mid-macro EOS must truncate at the EOS token"
+
+
+def test_matrix_covers_every_registered_arch():
+    """The parametrization above is the whole registry — adding a config
+    without geometry support fails here, not in production."""
+    assert len(C.ARCHS) >= 10
+    from repro.models import model as mdl
+    for name in C.ARCHS:
+        cfg = C.reduced(name)
+        assert mdl.paged_supported(cfg), name
+        specs = mdl.slot_leaf_specs(cfg, 4)
+        assert specs, name
+        for _, leaves in specs:
+            assert set(leaves) in ({"k", "v"}, {"ckv", "krope"}, {"state"}), \
+                (name, set(leaves))
+
+
+def test_window_ring_wraps_in_matrix_workload():
+    """The matrix workload genuinely exercises ring wrap-around for the
+    windowed architectures (prompt + steps > reduced window)."""
+    windowed = [n for n in C.ARCHS
+                if any(w for w in _windows(C.reduced(n)))]
+    assert windowed, "registry lost all windowed architectures"
+    for n in windowed:
+        w = min(w for w in _windows(C.reduced(n)) if w)
+        assert 9 + 7 > w, f"{n}: workload too short to wrap window={w}"
+
+
+def _windows(cfg):
+    from repro.models import model as mdl
+    return [window for _, _, _, window, _ in mdl.state_slot_meta(cfg)]

@@ -46,10 +46,12 @@ def test_input_specs_all_cells():
 
 def test_cell_table_is_the_assignment():
     cells = C.cells(include_skipped=True)
-    assert len(cells) == 40
+    assert len(cells) == len(C.ARCHS) * len(C.SHAPES)
     skipped = {(a, s) for a, s, sk in cells if sk}
     assert all(s == "long_500k" for _, s in skipped)
-    assert len(skipped) == 7
+    # one skipped long_500k cell per arch lacking long-context support
+    assert len(skipped) == sum(not C.get(a).supports_long_context
+                               for a in C.ARCHS)
 
 
 def test_host_mesh_shapes():

@@ -1,0 +1,270 @@
+"""Property tests for ``SharedPagedPools`` bookkeeping invariants.
+
+The pool is the single allocator behind every cache geometry (attention
+k/v, MLA compressed rows, recurrent state pages, shared prefixes), so
+its invariants are load-bearing for the whole serving stack:
+
+  * no slot double-assignment: ``slot_of`` / ``page_of_slot`` stay
+    mutually-inverse partial maps at all times,
+  * alloc/free conservation: free + allocated == n_logical, allocation
+    accounting matches the owner mask, freed ids never leak,
+  * slot_of agrees with the residency gauges the observability layer
+    exports (``resident_mask`` vs occupied slots),
+  * per-geometry leaves never cross-contaminate: a scatter into one
+    layer's leaf leaves every other layer's storage bit-identical.
+
+When Hypothesis is installed the op sequences are drawn (and shrunk) by
+it; otherwise a seeded random-walk fallback runs the same interpreter,
+so the properties are exercised on every environment.
+"""
+
+import numpy as np
+import pytest
+
+from repro.memtier.tiering import SharedPagedPools
+
+N_LOGICAL = 24
+HBM = 8
+
+
+class _Harness:
+    """Op-sequence interpreter with invariant checks after every op."""
+
+    def __init__(self, n_logical=N_LOGICAL, hbm=HBM):
+        self.pools = SharedPagedPools(n_logical, hbm)
+        self.live = {}                      # owner -> gids
+        self.next_owner = 0
+
+    # -- invariants ----------------------------------------------------------
+    def check(self):
+        p = self.pools
+        held = np.nonzero(p.slot_of >= 0)[0]
+        slots = p.slot_of[held]
+        assert len(set(slots.tolist())) == len(slots), \
+            "two pages mapped to one HBM slot"
+        assert np.all(p.page_of_slot[slots] == held), \
+            "slot_of / page_of_slot stopped being inverse"
+        occ = np.nonzero(p.page_of_slot >= 0)[0]
+        back = p.page_of_slot[occ]
+        assert len(set(back.tolist())) == len(back), \
+            "one page occupies two slots"
+        assert np.all(p.slot_of[back] == occ)
+        # conservation
+        assert p.free_pages + p.allocated_pages == p.n_logical
+        assert int(p.allocated_mask.sum()) == p.allocated_pages
+        assert set(p._free_ids).isdisjoint(
+            np.nonzero(p.allocated_mask)[0].tolist()), \
+            "allocated page still on the free list"
+        assert len(set(p._free_ids)) == len(p._free_ids)
+        # residency gauge agreement
+        assert int(p.resident_mask.sum()) == int((p.page_of_slot >= 0).sum())
+        assert int(p.resident_mask.sum()) <= p.hbm_pages
+        # the model's view of liveness matches the pool's
+        live = (np.concatenate(list(self.live.values()))
+                if self.live else np.empty(0, np.int64))
+        assert np.array_equal(np.sort(live),
+                              np.nonzero(p.allocated_mask)[0])
+
+    # -- ops -----------------------------------------------------------------
+    def _live_gids(self):
+        if not self.live:
+            return np.empty(0, np.int64)
+        return np.concatenate(list(self.live.values()))
+
+    def _subset(self, a, k):
+        gids = np.unique(self._live_gids())
+        if gids.size == 0:
+            return gids
+        k = max(1, min(k, gids.size, self.pools.hbm_pages))
+        start = a % gids.size
+        idx = (start + np.arange(k)) % gids.size
+        return np.unique(gids[idx])
+
+    def op_alloc(self, k):
+        k = max(1, k)
+        before = self.pools.free_pages
+        gids = self.pools.alloc(k, self.next_owner)
+        if k > before:
+            assert gids is None, "alloc over-committed the logical space"
+        else:
+            assert gids is not None, "alloc refused with pages free"
+            assert len(set(gids.tolist())) == k
+            assert np.all(self.pools.owner_of[gids] == self.next_owner)
+            self.live[self.next_owner] = gids
+            self.next_owner += 1
+
+    def op_free(self, idx):
+        if not self.live:
+            return
+        owner = sorted(self.live)[idx % len(self.live)]
+        gids = self.live.pop(owner)
+        self.pools.free(gids)
+        assert not self.pools.resident_mask[gids].any(), \
+            "freed page still resident"
+        assert np.all(self.pools.owner_of[gids] == -1)
+
+    def op_ensure(self, a, k):
+        sub = self._subset(a, k)
+        if sub.size == 0:
+            return
+        was = self.pools.table(sub) >= 0
+        fetched = self.pools.ensure_resident(sub)
+        assert fetched == int((~was).sum()), \
+            "fetch count disagrees with prior residency"
+        assert np.all(self.pools.table(sub) >= 0), \
+            "ensure_resident left a page host-only"
+
+    def op_assign(self, a, k):
+        sub = self._subset(a, k)
+        if sub.size == 0:
+            return
+        slots = self.pools.assign_slots(sub)
+        assert np.all(slots >= 0)
+        assert len(set(slots.tolist())) == len(slots), \
+            "assign_slots handed one slot to two pages"
+        assert np.array_equal(slots, self.pools.table(sub))
+
+    OPS = ("alloc", "free", "ensure", "assign")
+
+    def run(self, ops):
+        for code, a, b in ops:
+            name = self.OPS[code % len(self.OPS)]
+            if name == "alloc":
+                self.op_alloc(a % (HBM + 4))
+            elif name == "free":
+                self.op_free(a)
+            elif name == "ensure":
+                self.op_ensure(a, b % HBM + 1)
+            else:
+                self.op_assign(a, b % HBM + 1)
+            self.check()
+        # drain: freeing everything restores the empty pool
+        for owner in sorted(self.live):
+            self.pools.free(self.live[owner])
+        self.live.clear()
+        self.check()
+        assert self.pools.free_pages == self.pools.n_logical
+
+
+def _random_ops(rng, n=40):
+    return [(int(rng.integers(0, 4)), int(rng.integers(0, 64)),
+             int(rng.integers(0, 64))) for _ in range(n)]
+
+
+def test_pool_invariants_seeded_walks():
+    """Seeded fallback: the same interpreter Hypothesis drives, over 30
+    deterministic random walks — runs everywhere, shrinks nowhere."""
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        _Harness().run(_random_ops(rng))
+
+
+def test_pool_invariants_hypothesis():
+    """Property-based run (skipped when Hypothesis is unavailable)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 63),
+                                  st.integers(0, 63)),
+                        min_size=1, max_size=60))
+    def prop(ops):
+        _Harness().run(ops)
+
+    prop()
+
+
+def test_alloc_exhaustion_and_reuse_is_deterministic():
+    p = SharedPagedPools(8, 4)
+    a = p.alloc(5, 0)
+    b = p.alloc(3, 1)
+    assert p.alloc(1, 2) is None and p.free_pages == 0
+    p.free(a)
+    c = p.alloc(5, 3)
+    assert np.array_equal(np.sort(c), np.sort(a)), \
+        "freed ids must be the ones reused (lowest-first determinism)"
+    p.free(b)
+    p.free(c)
+    assert p.free_pages == 8
+
+
+def test_attach_emits_geometry_event_and_plane_accounting():
+    """pool.attach reports the layered geometry (layer count, leaf-name
+    set, migration planes) so a trace reader can interpret tier.move's
+    pages_moved without the config in hand."""
+    from repro import obs
+    from repro.obs import telemetry
+
+    prev = telemetry.get()
+    r = obs.install(obs.Recorder(enabled=True))
+    try:
+        p = SharedPagedPools(N_LOGICAL, HBM)
+        p.attach_layered([(1, {"ckv": (4, 5), "krope": (4, 2)}),
+                          (2, {"state": (7,)})])
+        ev = r.events("pool.attach")
+        assert len(ev) == 1
+        assert ev[0]["layers"] == 2
+        assert set(ev[0]["leaves"].split(",")) == {"ckv", "krope", "state"}
+        assert ev[0]["planes"] == 2 == p.move_planes
+    finally:
+        obs.install(prev)
+
+
+def test_layered_leaves_never_cross_contaminate():
+    """Scatters into one geometry's leaf leave every other layer's
+    storage bit-identical — the mixed-geometry pool is partitioned."""
+    import jax.numpy as jnp
+    from repro.memtier.tiering import (PAGE_DROP, write_pages_batched,
+                                       write_state_pages)
+
+    ps = 4
+    specs = [
+        (2, {"k": (ps, 2, 3), "v": (ps, 2, 3)}),   # plain attention
+        (1, {"ckv": (ps, 5), "krope": (ps, 2)}),   # MLA compressed
+        (3, {"state": (7,)}),                      # recurrent state
+    ]
+    p = SharedPagedPools(N_LOGICAL, HBM)
+    p.attach_layered(specs)
+    assert p.layer_leaves == (("k", "v"), ("ckv", "krope"), ("state",))
+    assert p.move_planes == 2
+    kv = p.kv_view()
+    # shape law: host [R, n_logical, *trail], hbm [R, hbm, *trail];
+    # absent leaves are None, never zero-sized placeholders
+    for li, (r, leaves) in enumerate(specs):
+        for name in ("k", "v", "ckv", "krope", "state"):
+            host, hbm = kv[f"{name}_host"][li], kv[f"{name}_hbm"][li]
+            if name in leaves:
+                assert host.shape == (r, N_LOGICAL) + leaves[name]
+                assert hbm.shape == (r, HBM) + leaves[name]
+            else:
+                assert host is None and hbm is None
+
+    gids = p.alloc(3, 0)
+    slots = p.assign_slots(gids)
+    # token-paged write into the attention and MLA layers only
+    pad = lambda x: jnp.concatenate(
+        [jnp.asarray(x, jnp.int32), jnp.full((1,), PAGE_DROP, jnp.int32)]
+    )[None]                                         # [J=1, n_max=3]
+    leaves = {
+        "k": [jnp.ones((2, 1, 2 * ps, 2, 3)), None, None],
+        "v": [2 * jnp.ones((2, 1, 2 * ps, 2, 3)), None, None],
+        "ckv": [None, 3 * jnp.ones((1, 1, 2 * ps, 5)), None],
+        "krope": [None, 4 * jnp.ones((1, 1, 2 * ps, 2)), None],
+    }
+    kv = write_pages_batched(kv, leaves,
+                             pad(gids[:2]), pad(slots[:2]))
+    kv = write_state_pages(kv, [None, None,
+                                5 * jnp.ones((3, 1, 7))],
+                           jnp.asarray(gids[2:], jnp.int32),
+                           jnp.asarray(slots[2:], jnp.int32))
+    # every write landed where addressed...
+    assert float(kv["k_host"][0][:, gids[:2]].min()) == 1.0
+    assert float(kv["v_hbm"][0][:, slots[:2]].min()) == 2.0
+    assert float(kv["ckv_host"][1][:, gids[:2]].min()) == 3.0
+    assert float(kv["krope_hbm"][1][:, slots[:2]].min()) == 4.0
+    assert float(kv["state_host"][2][:, gids[2]].min()) == 5.0
+    # ...and nowhere else: other pages of the written leaves stay zero
+    other = np.setdiff1d(np.arange(N_LOGICAL), gids[:2])
+    assert float(jnp.abs(kv["k_host"][0][:, other]).max()) == 0.0
+    sother = np.setdiff1d(np.arange(N_LOGICAL), [gids[2]])
+    assert float(jnp.abs(kv["state_host"][2][:, sother]).max()) == 0.0
