@@ -105,12 +105,29 @@ def smoke() -> None:
             >= sp["modes"]["paged"]["tokens_per_sec"]), \
         "macro-step decode must be at least as fast as the per-token " \
         f"paged path (got {sp['speedup_macro_vs_per_token']:.2f}x)"
+    # the overlap and telemetry wall-clock bars bind where overlap (and
+    # a clean paired measurement) is physically possible -- >= 2 cores.
+    # A single-core host time-slices the scan, the boundary work and the
+    # recorder on one core, so both floors widen to no-material-
+    # regression (see benchmarks/traffic.py and docs/serving.md)
+    multicore = sp["overlap_parallel_substrate"]
+    ov_floor = 1.0 if multicore else 0.90
+    print(f"smoke_overlap,0,"
+          f"speedup={sp['speedup_overlap_vs_sync']:.3f};"
+          f"pipelined_parity={sp['parity_vs_generate']['pipelined']}")
+    assert sp["parity_vs_generate"]["pipelined"], \
+        "the pipelined loop diverged from per-request generate"
+    assert sp["speedup_overlap_vs_sync"] >= ov_floor, \
+        "the pipelined loop must not serve slower than the synchronous " \
+        f"macro loop (got {sp['speedup_overlap_vs_sync']:.2f}x, " \
+        f"floor {ov_floor:.2f}x)"
     ov = sp["telemetry_overhead"]
+    oh_floor = 0.97 if multicore else 0.90
     print(f"smoke_telemetry,0,overhead_ratio={ov['ratio']:.3f};"
           f"enabled_tok_s={ov['enabled_tok_s']:.0f}")
-    assert ov["ratio"] >= 0.97, \
-        "telemetry-enabled macro-loop throughput must stay within 3% of " \
-        f"disabled (got {ov['ratio']:.3f})"
+    assert ov["ratio"] >= oh_floor, \
+        "telemetry-enabled macro-loop throughput regressed vs disabled " \
+        f"(got {ov['ratio']:.3f}, floor {oh_floor:.2f})"
 
     # paged MLA admission: compressed-row deepseek pages out of the same
     # slot pool, token-identical and >= 1.5x leaner than dense rows

@@ -27,7 +27,7 @@ import re
 import sys
 
 DOC = "docs/observability.md"
-DOC_TYPE = re.compile(r"^\|\s*`([a-z_]+\.[a-z_]+)`\s*\|", re.M)
+DOC_TYPE = re.compile(r"^\|\s*`([a-z_]+(?:\.[a-z_]+)+)`\s*\|", re.M)
 
 
 def load_events(root: pathlib.Path):

@@ -268,7 +268,8 @@ class OnlineTuner:
                  guard_ratio: Optional[float] = 6.0,
                  var_cv: Optional[float] = 0.3,
                  var_max_factor: int = 4,
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 actuation_lag: int = 0):
         self.collector = StreamingReuseCollector(
             n_pages, window=window or 4 * profile_steps, bin_width=bin_width)
         self.profile_steps = profile_steps
@@ -290,6 +291,12 @@ class OnlineTuner:
         self.var_cv = var_cv
         self.var_max_factor = max(1, int(var_max_factor))
         self.warm_start = warm_start
+        # extra HOLD transient windows to discard after a period switch:
+        # a pipelined serving loop applies a new period one macro boundary
+        # late (the stale-by-one hand-off), so the residency transient the
+        # _hold_skip window absorbs stretches `actuation_lag` windows
+        # further before the baseline is clean
+        self.actuation_lag = max(0, int(actuation_lag))
 
         self.state = self.PROFILE
         self.period = int(default_period)
@@ -321,7 +328,8 @@ class OnlineTuner:
         self._drift_strikes = 0
         self._improve_strikes = 0
         self._guard_strikes = 0
-        self._hold_skip = False
+        # counts HOLD transient windows still to skip (int; bools coerce)
+        self._hold_skip = 0
         self._resweep_pending = False
         self._warm_next = True
         # winner's attested trial cost from the most recent sweep: floors
@@ -545,7 +553,7 @@ class OnlineTuner:
         self._drift_strikes = 0
         self._improve_strikes = 0
         self._guard_strikes = 0
-        self._hold_skip = True
+        self._hold_skip = 1 + self.actuation_lag
         # the truncated sweep only half-ranked the ladder: once HOLD
         # re-attests a clean baseline (the burst passed, or the new cost
         # level proved real), finish the job with a warm re-sweep
@@ -702,8 +710,10 @@ class OnlineTuner:
             self._guard_strikes = 0
             # the first HOLD window inherits the residency transient from
             # the period switch (the same transient TRIAL's head discard
-            # exists for): skip it before baselining
-            self._hold_skip = True
+            # exists for): skip it before baselining -- plus one window
+            # per actuation_lag when the serving loop applies the switch
+            # a boundary late
+            self._hold_skip = 1 + self.actuation_lag
             self._resweep_pending = False
             self.retunes += 1
             self.converged_at = self.step
@@ -719,7 +729,7 @@ class OnlineTuner:
         if self._hold_skip:
             # period-switch transient window: measure nothing from it (a
             # clean switch must not fake drift via a polluted baseline)
-            self._hold_skip = False
+            self._hold_skip = int(self._hold_skip) - 1
             if (r := _obs.RECORDER).enabled:
                 r.emit("tuner.hold_window", tuner=self.obs_id,
                        step=self.step, kind="skip-transient",

@@ -85,6 +85,12 @@ class TierConfig:
     miss_penalty: float = 32.0     # on-demand host fetch (PCIe ~25GB/s vs HBM)
     mig_cost: float = 16.0         # async page migration
     wakeup_cost: float = 4.0       # scheduler wakeup per period
+    # a demand-fetch issued through ``ensure_resident`` moves all its
+    # pages in ONE gathered host->HBM transfer, so a fetched page is
+    # cheaper than a mid-kernel on-demand miss (no per-page latency, the
+    # transfer amortises): this is what TrafficMonitor charges per
+    # ``fetched`` page
+    fetch_cost: float = 24.0
 
 
 @dataclasses.dataclass
@@ -99,6 +105,8 @@ class PagedPools:
     v_hbm: jnp.ndarray
     slot_of: np.ndarray            # int32[n_logical] -> hbm slot | -1
     page_of_slot: np.ndarray       # int32[hbm_pages] -> logical | -1
+    #: bumped whenever slot_of changes (page-table caches key on it)
+    slot_epoch: int = 0
 
     @classmethod
     def create(cls, k_pages, v_pages, hbm_pages: int):
@@ -139,6 +147,28 @@ def _migrate_stacked(pool_hbm, pool_host, slots, logicals):
     """`_migrate` for layer-stacked pools [R, P, page, KV, D]: one page's
     bytes move for every repeat of the layer slot together."""
     return pool_hbm.at[:, slots].set(pool_host[:, logicals])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _migrate_all(kv, slots, logicals):
+    """One gathered host->HBM transfer for the WHOLE layered pytree: every
+    leaf of every layer gathers its ``logicals`` pages and scatters them
+    into ``slots`` inside a single jitted launch (donated, so XLA updates
+    the pool buffers in place).  Replaces the per-leaf x per-layer
+    ``_migrate_stacked`` loop -- L*leaves dispatches collapse into one,
+    which is what makes ``ensure_resident`` cheap enough to run as the
+    pipelined prefetch stage.  ``slots``/``logicals`` are padded to a
+    power of two to bound recompiles: pad logicals with 0 (the gather is
+    harmless), pad slots with ``PAGE_DROP`` so the scatter drops them."""
+    out = {k: list(v) for k, v in kv.items()}
+    for hk in [k for k in kv if k.endswith("_hbm")]:
+        dk = hk[:-4] + "_host"
+        for i, h in enumerate(kv[hk]):
+            if h is None:
+                continue
+            out[hk][i] = h.at[:, slots].set(kv[dk][i][:, logicals],
+                                            mode="drop")
+    return out
 
 
 class SharedPagedPools:
@@ -185,6 +215,10 @@ class SharedPagedPools:
         self.slot_of = np.full((n_logical,), -1, np.int32)
         self.page_of_slot = np.full((hbm_pages,), -1, np.int32)
         self.owner_of = np.full((n_logical,), -1, np.int64)
+        #: bumped on every ``slot_of`` mutation -- page-table caches key
+        #: on it to skip the per-boundary rebuild + device upload when no
+        #: page moved (see ContinuousBatcher's table cache)
+        self.slot_epoch = 0
         # free logical ids, popped lowest-first so reuse is deterministic
         self._free_ids: List[int] = list(range(n_logical - 1, -1, -1))
         # per-slot touch tick for the demand-fetch victim choice
@@ -326,6 +360,8 @@ class SharedPagedPools:
         held = slots[slots >= 0]
         self.page_of_slot[held] = -1
         self.slot_of[gids] = -1
+        if held.size:
+            self.slot_epoch += 1
         self.owner_of[gids] = -1
         self._free_ids.extend(sorted(gids.tolist(), reverse=True))
         self.allocated_pages -= int(gids.size)
@@ -371,14 +407,18 @@ class SharedPagedPools:
             self.k_hbm = _migrate(self.k_hbm, self.k_host, sl, lg)
             self.v_hbm = _migrate(self.v_hbm, self.v_host, sl, lg)
         if self.kv_layers is not None:
-            kv = self.kv_layers
-            for hk in [k for k in kv if k.endswith("_hbm")]:
-                dk = hk[:-4] + "_host"
-                for i in range(len(kv[hk])):
-                    if kv[hk][i] is None:
-                        continue
-                    kv[hk][i] = _migrate_stacked(kv[hk][i], kv[dk][i],
-                                                 sl, lg)
+            # one gathered transfer for every leaf of every layer: pad the
+            # index vectors to a power of two so the jitted launch is
+            # reused across fetch sizes (dropped-scatter padding)
+            sl_np = np.asarray(slots, np.int32)
+            lg_np = np.asarray(logicals, np.int32)
+            pad = (1 << max(0, int(sl_np.size - 1).bit_length())) - sl_np.size
+            if pad > 0:
+                sl_np = np.concatenate(
+                    [sl_np, np.full(pad, PAGE_DROP, np.int32)])
+                lg_np = np.concatenate([lg_np, np.zeros(pad, np.int32)])
+            self.set_kv(_migrate_all(self.kv_view(), jnp.asarray(sl_np),
+                                     jnp.asarray(lg_np)))
 
     def _place(self, gids: np.ndarray) -> Tuple[List[int], np.ndarray]:
         """Slot bookkeeping shared by ``ensure_resident`` and
@@ -407,6 +447,8 @@ class SharedPagedPools:
             self.slot_of[gid] = slot
             self.page_of_slot[slot] = gid
             slots.append(slot)
+        if missing.size:
+            self.slot_epoch += 1
         self._slot_tick[self.slot_of[gids]] = self._tick
         return slots, missing
 
@@ -618,40 +660,33 @@ class TieringManager:
         n_evict = max(0, n_bring - n_free)
         return bring[:n_bring], evict[:n_evict]
 
-    def maybe_tier(self, pools: PagedPools,
-                   active: Optional[np.ndarray] = None,
-                   force: bool = False) -> PagedPools:
-        """``force=True`` tiers regardless of the step cadence -- the
-        macro-step serving loop wakes the host exactly once per movement
-        period, so every wakeup IS a tiering boundary."""
+    def plan_tier(self, resident: np.ndarray, n_free: int,
+                  active: Optional[np.ndarray] = None, *,
+                  planes: int = 2, force: bool = False
+                  ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """The decision half of ``maybe_tier``: gate on the period cadence,
+        EMA-rank, plan the swaps, and charge the period's modeled cost --
+        all from a residency *snapshot*, never touching a pool.  This is
+        what the pipelined serving loop runs on its background decision
+        thread (the pools stay owned by the dispatch thread).  Returns
+        ``(bring, evict)``, or ``None`` when no boundary is due.  Cost is
+        charged at plan time: the plan is deterministic from the snapshot,
+        so sync and async modes account identically."""
         if self.step == 0:
-            return pools
+            return None
         if force:
             self._since_tier = 0
         elif not self._tier_due():
-            return pools
+            return None
         cfg = self.cfg
-        resident = pools.slot_of >= 0
         desired_set = self._rank_desired(resident, active)
-        free_slots = np.nonzero(pools.page_of_slot < 0)[0]
-        bring, evict = self._plan_swaps(resident, desired_set,
-                                        len(free_slots))
+        bring, evict = self._plan_swaps(resident, desired_set, int(n_free))
         n_mig = len(bring)
-        if n_mig:
-            slots = np.concatenate([
-                free_slots[: n_mig - len(evict)],
-                pools.slot_of[evict]]).astype(pools.slot_of.dtype)
-            pools.slot_of[evict] = -1
-            pools.slot_of[bring] = slots
-            pools.page_of_slot[slots] = bring
-            pools.touch_slots(slots)   # shared pools track slot recency
-            pools.migrate_slots(slots, bring)
         self.migrations += int(n_mig)
         # planes x = one plane per leaf of the pool's geometry (k + v for
         # classic attention, ckv + krope for MLA, 1 for state-only pools);
         # evictions move no data (the host copy is write-through, dropping
         # a slot is free)
-        planes = int(getattr(pools, "move_planes", 2))
         self.data_moved_pages += planes * int(n_mig)
         self.modeled_time += n_mig * cfg.mig_cost + cfg.wakeup_cost
         if (r := _obs.RECORDER).enabled:
@@ -660,6 +695,55 @@ class TieringManager:
                    evicted=int(len(evict)), pages_moved=planes * int(n_mig),
                    cost=float(n_mig * cfg.mig_cost + cfg.wakeup_cost))
             r.count("tier.pages_moved", planes * int(n_mig))
+        return bring, evict
+
+    def apply_plan(self, pools: PagedPools, bring: np.ndarray,
+                   evict: np.ndarray) -> None:
+        """Actuate a ``plan_tier`` decision on the live pools, revalidating
+        against state that may have moved since the snapshot was taken (in
+        async mode requests retire and demand-fetches land between plan
+        and apply): bring entries a demand-fetch already made resident and
+        evict entries that already left HBM are dropped, and the free-slot
+        arithmetic is recomputed against the live pool.  (A bring of a
+        since-freed ID is deliberately NOT filtered: the sync rule can
+        promote score-zero unallocated IDs into spare capacity, and the
+        write-through invariant makes the stale copy harmless.)  On the
+        synchronous path the snapshot IS the live state and the
+        revalidation passes everything through unchanged."""
+        resident = pools.slot_of >= 0
+        bring = np.asarray(bring, np.int64)
+        evict = np.asarray(evict, np.int64)
+        bring = bring[~resident[bring]]
+        evict = evict[resident[evict]]
+        free_slots = np.nonzero(pools.page_of_slot < 0)[0]
+        n_bring = min(len(bring), len(free_slots) + len(evict))
+        n_evict = max(0, n_bring - len(free_slots))
+        bring, evict = bring[:n_bring], evict[:n_evict]
+        n_mig = len(bring)
+        if not n_mig:
+            return
+        slots = np.concatenate([
+            free_slots[: n_mig - len(evict)],
+            pools.slot_of[evict]]).astype(pools.slot_of.dtype)
+        pools.slot_of[evict] = -1
+        pools.slot_of[bring] = slots
+        pools.page_of_slot[slots] = bring
+        pools.slot_epoch = getattr(pools, "slot_epoch", 0) + 1
+        pools.touch_slots(slots)   # shared pools track slot recency
+        pools.migrate_slots(slots, bring)
+
+    def maybe_tier(self, pools: PagedPools,
+                   active: Optional[np.ndarray] = None,
+                   force: bool = False) -> PagedPools:
+        """``force=True`` tiers regardless of the step cadence -- the
+        macro-step serving loop wakes the host exactly once per movement
+        period, so every wakeup IS a tiering boundary."""
+        plan = self.plan_tier(pools.slot_of >= 0,
+                              int((pools.page_of_slot < 0).sum()), active,
+                              planes=int(getattr(pools, "move_planes", 2)),
+                              force=force)
+        if plan is not None:
+            self.apply_plan(pools, *plan)
         return pools
 
     def maybe_tier_symbolic(self, resident: np.ndarray,

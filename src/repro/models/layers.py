@@ -187,8 +187,15 @@ def _sdpa_chunked(q, k, v, mask, softcap: float, q_chunk: int = 512):
 
 
 def attention_apply(p: Params, cfg: ModelConfig, x, kv_x, positions, mask,
-                    *, kv_positions=None, use_rope=True):
-    """Full attention (training/prefill).  Returns (out, (k, v))."""
+                    *, kv_positions=None, use_rope=True, past=None):
+    """Full attention (training/prefill).  Returns (out, (k, v)).
+
+    ``past`` -- optional ``(past_k, past_v)`` of already-processed prefix
+    tokens (post-qk-norm, post-rope: exactly the cache entries a previous
+    chunk returned), each [B, P, KV, D].  The chunk attends over
+    ``past ++ own`` keys; ``mask`` must then cover [.., S, P+S] (build it
+    from the concatenated key positions).  The returned cache entries are
+    the OWN chunk's only -- the caller threads the accumulation."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
@@ -199,7 +206,12 @@ def attention_apply(p: Params, cfg: ModelConfig, x, kv_x, positions, mask,
         kv_pos = positions if kv_positions is None else kv_positions
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, kv_pos, cfg.rope_theta)
-    out = _sdpa_chunked(q, k, v, mask, cfg.softcap)
+    k_all, v_all = k, v
+    if past is not None:
+        past_k, past_v = past
+        k_all = jnp.concatenate([past_k.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([past_v.astype(v.dtype), v], axis=1)
+    out = _sdpa_chunked(q, k_all, v_all, mask, cfg.softcap)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, (k, v)
 
@@ -259,9 +271,14 @@ def mla_init(key, cfg: ModelConfig):
     return split_tree(tree)
 
 
-def mla_apply(p: Params, cfg: ModelConfig, x, positions, mask):
+def mla_apply(p: Params, cfg: ModelConfig, x, positions, mask, *, past=None):
     """Training/prefill MLA: materialise per-head K/V.  Returns
-    (out, (c_kv, k_rope)) -- the *compressed* cache entries."""
+    (out, (c_kv, k_rope)) -- the *compressed* cache entries.
+
+    ``past`` -- optional ``(past_ckv, past_krope)`` compressed cache rows
+    of a previous chunk ([B, P, kv_lora], [B, P, rope]); the chunk attends
+    over ``past ++ own`` (``mask``: [.., S, P+S]) and still returns only
+    its OWN chunk's cache entries."""
     m: MLAConfig = cfg.mla
     cq = rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"])
     q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(x.dtype))
@@ -271,11 +288,18 @@ def mla_apply(p: Params, cfg: ModelConfig, x, positions, mask):
     c_kv = rms_norm(x @ p["w_dkv"].astype(x.dtype), p["kv_norm"])
     k_rope = rope((x @ p["w_kr"].astype(x.dtype))[:, :, None, :], positions,
                   cfg.rope_theta)  # [B,S,1,rope] shared across heads
-    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(x.dtype))
-    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(x.dtype))
+    c_all, kr_all = c_kv, k_rope[:, :, 0, :]
+    if past is not None:
+        past_ckv, past_krope = past
+        c_all = jnp.concatenate([past_ckv.astype(c_kv.dtype), c_kv], axis=1)
+        kr_all = jnp.concatenate([past_krope.astype(c_kv.dtype), kr_all],
+                                 axis=1)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uv"].astype(x.dtype))
 
     k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_dim,))],
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_dim,))],
         axis=-1)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = _sdpa_chunked(q_full, k, v, mask, cfg.softcap)

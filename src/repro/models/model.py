@@ -106,22 +106,32 @@ def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
 
 
 def _apply_block_seq(slot_p, cfg: ModelConfig, kind: LayerKind, x, *,
-                     positions, cond, mesh, state=None, shard=_IDENT):
-    """Sequence-mode block (train/prefill).  Returns (x, cache_entry, aux)."""
+                     positions, cond, mesh, state=None, past=None,
+                     k_positions=None, shard=_IDENT):
+    """Sequence-mode block (train/prefill).  Returns (x, cache_entry, aux).
+
+    ``past`` / ``k_positions`` serve chunked prefill: ``past`` is the
+    slot's accumulated cache entries from previous chunks (one repeat's
+    slice) and ``k_positions`` the concatenated past++own key positions
+    the causal mask must range over."""
     aux = jnp.float32(0.0)
     h = L.rms_norm(x, slot_p["norm1"])
     cache_entry = None
     if kind.is_attention:
         window = cfg.window_size if kind.base == "local" else 0
-        mask = L.causal_mask(positions, positions, window=window,
+        kpos = positions if k_positions is None else k_positions
+        mask = L.causal_mask(positions, kpos, window=window,
                              prefix_len=cfg.prefix_len)
         if kind.mla:
-            out, (ckv, krope) = L.mla_apply(slot_p["attn"], cfg, h, positions,
-                                            mask)
+            out, (ckv, krope) = L.mla_apply(
+                slot_p["attn"], cfg, h, positions, mask,
+                past=(None if past is None
+                      else (past["ckv"], past["krope"])))
             cache_entry = {"ckv": ckv, "krope": krope}
         else:
-            out, (k, v) = L.attention_apply(slot_p["attn"], cfg, h, h,
-                                            positions, mask)
+            out, (k, v) = L.attention_apply(
+                slot_p["attn"], cfg, h, h, positions, mask,
+                past=(None if past is None else (past["k"], past["v"])))
             cache_entry = {"k": k, "v": v}
         x = x + out
     else:
@@ -246,17 +256,21 @@ def _constrain_slots(slot_ps, slot_specs, pshard):
 
 
 def _run_segments_seq(params, cfg: ModelConfig, x, *, positions, cond, mesh,
-                      states=None, shard=_IDENT, collect_cache=False,
+                      states=None, pasts=None, k_positions=None,
+                      shard=_IDENT, collect_cache=False,
                       param_specs=None, pshard=None):
     """Run all segments in sequence mode.  states (optional) mirror the
-    segment/slot structure with [R, ...] stacked leaves (recurrent only).
-    Returns (x, caches, aux_total)."""
+    segment/slot structure with [R, ...] stacked leaves (recurrent only);
+    pasts (optional, chunked prefill) likewise mirror it with previous
+    chunks' attention cache entries stacked [R, B, P, ...], attended via
+    ``k_positions``.  Returns (x, caches, aux_total)."""
     aux_total = jnp.float32(0.0)
     caches: List[List[Any]] = []
     for si, (pattern, repeats) in enumerate(cfg.segments):
         kinds = [parse_kind(s) for s in pattern]
         slot_params = params["segments"][si]
         seg_states = states["segments"][si] if states is not None else None
+        seg_pasts = pasts["segments"][si] if pasts is not None else None
 
         slot_specs = (_strip_layers(param_specs["segments"][si])
                       if param_specs is not None else None)
@@ -264,14 +278,16 @@ def _run_segments_seq(params, cfg: ModelConfig, x, *, positions, cond, mesh,
         if cfg.unroll_layers:
             entries_all = []
 
-            def one_repeat(xx, aux, slot_ps, slot_sts):
+            def one_repeat(xx, aux, slot_ps, slot_sts, slot_pst):
                 slot_ps = _constrain_slots(slot_ps, slot_specs, pshard)
                 entries = []
                 for j, kind in enumerate(kinds):
                     st = slot_sts[j] if slot_sts is not None else None
+                    pst = slot_pst[j] if slot_pst is not None else None
                     xx, entry, a = _apply_block_seq(
                         slot_ps[j], cfg, kind, xx, positions=positions,
-                        cond=cond, mesh=mesh, state=st, shard=shard)
+                        cond=cond, mesh=mesh, state=st, past=pst,
+                        k_positions=k_positions, shard=shard)
                     entries.append(entry)
                     aux = aux + a
                 return xx, aux, entries
@@ -282,7 +298,10 @@ def _run_segments_seq(params, cfg: ModelConfig, x, *, positions, cond, mesh,
                 slot_ps_r = jax.tree.map(lambda a: a[r], slot_params)
                 sts_r = (jax.tree.map(lambda a: a[r], seg_states)
                          if seg_states is not None else None)
-                x, aux_total, entries = fn(x, aux_total, slot_ps_r, sts_r)
+                pst_r = (jax.tree.map(lambda a: a[r], seg_pasts)
+                         if seg_pasts is not None else None)
+                x, aux_total, entries = fn(x, aux_total, slot_ps_r, sts_r,
+                                           pst_r)
                 entries_all.append(entries)
             if collect_cache:
                 stacked = []
@@ -297,32 +316,32 @@ def _run_segments_seq(params, cfg: ModelConfig, x, *, positions, cond, mesh,
 
         def body(carry, per_repeat):
             xx, aux = carry
-            slot_ps, slot_sts = per_repeat
+            slot_ps, slot_sts, slot_pst = per_repeat
             slot_ps = _constrain_slots(slot_ps, slot_specs, pshard)
             entries = []
             for j, kind in enumerate(kinds):
                 st = slot_sts[j] if slot_sts is not None else None
+                pst = slot_pst[j] if slot_pst is not None else None
                 xx, entry, a = _apply_block_seq(
                     slot_ps[j], cfg, kind, xx, positions=positions, cond=cond,
-                    mesh=mesh, state=st, shard=shard)
+                    mesh=mesh, state=st, past=pst, k_positions=k_positions,
+                    shard=shard)
                 entries.append(entry)
             return (xx, aux + a), entries
 
         body_fn = jax.checkpoint(body) if cfg.remat else body
+        has_st, has_pst = seg_states is not None, seg_pasts is not None
+        dummy = [jnp.zeros((repeats,))] * len(kinds)
+
+        def body_fn2(carry, pr, _st=has_st, _pst=has_pst):
+            slot_ps, sts, pst = pr
+            return body_fn(carry, (slot_ps, sts if _st else None,
+                                   pst if _pst else None))
+
         xs = (slot_params,
-              seg_states if seg_states is not None else [None] * len(kinds))
-        if seg_states is None:
-            xs = (slot_params, [jnp.zeros((repeats,))] * len(kinds))
-
-            def body_fn2(carry, pr):
-                slot_ps, _ = pr
-                return body_fn(carry, (slot_ps, None))
-
-            (x, aux_total), entries = jax.lax.scan(
-                body_fn2, (x, aux_total), xs)
-        else:
-            (x, aux_total), entries = jax.lax.scan(
-                body_fn, (x, aux_total), xs)
+              seg_states if has_st else dummy,
+              seg_pasts if has_pst else dummy)
+        (x, aux_total), entries = jax.lax.scan(body_fn2, (x, aux_total), xs)
         caches.append(entries if collect_cache else None)
     return x, caches, aux_total
 
@@ -730,6 +749,96 @@ def prefill_batched(params, cfg: ModelConfig, tokens, lengths, *, cond=None,
     return logits, {"segments": segs}
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, lengths, past=None, *,
+                  start: int = 0, cond=None, mesh=None, shard=_IDENT):
+    """One width-bounded chunk of a batched-admission prefill.
+
+    Splits ``prefill_batched``'s packed forward into chunks over absolute
+    positions so long-prompt admission can interleave with macro launches
+    (docs/serving.md, "Pipelined macro loop").  ``tokens``: [B, C], the
+    slice of the right-padded prompt batch covering absolute positions
+    ``[start, start+C)``; ``lengths``: int32[B] full true row lengths;
+    ``past``: the accumulated cache of every previous chunk (leaves
+    stacked [R, B, start, ...]; build it with ``chunk_past_extend`` from
+    this function's own returns).  ``start`` is static per jit
+    specialisation -- it fixes the past's time extent.
+
+    The past is kept at its exact length (no padding): each chunk's keys
+    are ``past ++ own`` at the same key indices the packed pass uses, so
+    every valid lane reduces over the identical value set.  Reduction
+    *widths* still differ from the packed pass (t grows chunk by chunk),
+    so logits agree to reduction-order ULP noise -- the same tolerance
+    class as dense-vs-paged attention, and token-identical through the
+    sampler (the chunked-prefill parity test pins this).
+
+    Returns (logits [B,1,V], cache_chunk): ``logits[b]`` is taken at the
+    row's final position clamped into this chunk, meaningful only when
+    ``start <= lengths[b]-1 < start+C`` (the caller keeps that chunk's
+    row); ``cache_chunk`` matches the corresponding position range of a
+    ``prefill_batched`` cache (``pos`` masked per row, -1 beyond its
+    length).  No ``extra_embeds``: admissions with a VLM/audio prefix
+    keep the packed path.
+    """
+    if not batched_prefill_supported(cfg):
+        raise ValueError(f"{cfg.name}: chunked prefill needs all-attention "
+                         "layers (recurrent state would fold in padding)")
+    x = L.embed(params["embed"], cfg, tokens)
+    b, c = x.shape[0], x.shape[1]
+    start = int(start)
+    positions = start + jnp.arange(c)[None]
+    k_positions = jnp.arange(start + c)[None]
+    x = shard(x, ("batch", "seq", "embed"))
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    x, caches, _ = _run_segments_seq(params, cfg, x, positions=positions,
+                                     cond=cond, mesh=mesh, shard=shard,
+                                     pasts=past, k_positions=k_positions,
+                                     collect_cache=True)
+    x = L.rms_norm(x, params["final_norm"])
+    take = jnp.clip(jnp.asarray(lengths) - 1 - start, 0, c - 1)
+    last = x[jnp.arange(b), take][:, None]
+    logits = L.unembed(params["embed"], cfg, last)
+
+    pos_row = jnp.where(positions < jnp.asarray(lengths)[:, None],
+                        positions, -1).astype(jnp.int32)
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        slots = []
+        for j, kind_s in enumerate(pattern):
+            kind = parse_kind(kind_s)
+            e = caches[si][j]
+            pos = jnp.broadcast_to(pos_row[None], (repeats, b, c))
+            if kind.mla:
+                slots.append({"ckv": e["ckv"], "krope": e["krope"],
+                              "pos": pos})
+            else:
+                slots.append({"k": e["k"], "v": e["v"], "pos": pos})
+        segs.append(slots)
+    return logits, {"segments": segs}
+
+
+def chunk_past_extend(past, cache_chunk):
+    """Accumulate chunked-prefill past: append ``cache_chunk`` (a
+    ``prefill_chunk`` second return) onto ``past`` along the time axis,
+    dropping the per-row ``pos`` (the next chunk rebuilds key positions
+    as the contiguous ``arange(start+C)``).  ``past=None`` starts the
+    accumulation.  Eager concatenation on (possibly lazy) device arrays:
+    it dispatches without blocking, so the scheduler can extend the past
+    behind an in-flight macro scan."""
+    segs = []
+    for si, slots in enumerate(cache_chunk["segments"]):
+        new_slots = []
+        for j, e in enumerate(slots):
+            ent = {k_: v_ for k_, v_ in e.items() if k_ != "pos"}
+            if past is not None:
+                old = past["segments"][si][j]
+                ent = {k_: jnp.concatenate([old[k_], v_], axis=2)
+                       for k_, v_ in ent.items()}
+            new_slots.append(ent)
+        segs.append(new_slots)
+    return {"segments": segs}
+
+
 def row_cache_from_batched(cache, cfg: ModelConfig, bi: int, length: int,
                            max_len: int):
     """Extract request ``bi`` from a ``prefill_batched`` cache as the row
@@ -1064,7 +1173,11 @@ def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
     fired; dead rows freeze completely -- no KV writes (their ``cur`` is
     -1 so the core masks them), no key folds, no mass, no emission -- so
     the emitted stream is bit-identical to the per-token path, which
-    retires a request on the host before the next launch.
+    retires a request on the host before the next launch.  The stop mask
+    is also evaluated at entry over the *incoming* token and budget: the
+    pipelined scheduler admits rows whose prefill-sampled first token is
+    still in flight, and such a row freezes before its first decode step
+    if that token already hits EOS or ``max_new``.
 
     Returns ``(tokens_out int32[n_steps, B] (-1 = row not alive), new_kv,
     state)`` with ``state = {mass_sum f32[B, n_row_pages], alive_steps
@@ -1109,9 +1222,20 @@ def decode_macro_step(params, cfg: ModelConfig, kv, tables, gid_tables,
             any_alive, run,
             lambda c: (c, jnp.full((b,), -1, jnp.int32)), carry)
 
+    # a row may enter with its stop condition already met: the pipelined
+    # scheduler admits fresh rows with the prefill-sampled first token
+    # still in flight, so the EOS / budget check the synchronous host
+    # path runs at activation happens here instead.  Such a row freezes
+    # before its first decode step (alive_steps 0, no KV writes, no
+    # tokens); for every other caller the incoming token was already
+    # host-checked and this predicate is identically False.
+    em0 = jnp.asarray(emitted, jnp.int32)
+    max_new = jnp.asarray(max_new, jnp.int32)
+    stopped0 = ((cur_pos >= 0)
+                & ((em0 >= max_new)
+                   | ((eos_ids >= 0) & (tokens[:, 0] == eos_ids))))
     init = (kv, tokens, cur_pos, keys, jnp.asarray(iters, jnp.int32),
-            jnp.asarray(emitted, jnp.int32),
-            jnp.zeros((b,), bool),
+            em0, stopped0,
             jnp.zeros((b, n_row_pages), jnp.float32),
             jnp.zeros((b,), jnp.int32))
     (kv, tok, pos, ks, it, em, stopped, mass_sum,

@@ -92,9 +92,11 @@ _ALL = [
         "planes one page migration moves"),
     # -- serve: the continuous-batching scheduler (wall clock) ---------------
     _ev("serve.admit",
-        ("step", "joiners", "pages", "queue_depth", "wall_ms"),
+        ("step", "joiners", "pages", "queue_depth", "wall_ms", "stall_ms"),
         "one admission batch: requests packed-prefilled together, pages "
-        "allocated, queue depth after, prefill wall time"),
+        "allocated, queue depth after, prefill wall time; the pipelined "
+        "loop adds stall_ms, the batch's worst reservation-to-activation "
+        "admission stall (the SLO the chunk knob trades against)"),
     _ev("serve.retire",
         ("step", "rid", "tokens"),
         "a request left the system (EOS or length); its pages recycle"),
@@ -107,6 +109,22 @@ _ALL = [
     _ev("serve.stream",
         ("phase", "tokens", "wall_ms"),
         "single-stream monitored_generate started/finished"),
+    _ev("serve.pipeline.stage",
+        ("step", "stage", "wall_ms"),
+        "one overlap-window stage of the pipelined macro loop finished "
+        "behind the in-flight scan: decision_wait, prefetch, tables or "
+        "admit"),
+    _ev("serve.pipeline.decision",
+        ("step", "generation", "period", "bring", "evict", "wait_ms"),
+        "a background-worker tiering/tuner decision was applied at a "
+        "macro boundary (the stale-by-one hand-off): its generation, the "
+        "period adopted, planned bring/evict sizes, and how long the "
+        "overlap window waited for it"),
+    _ev("serve.pipeline.admit_chunk",
+        ("step", "rid", "chunk", "tokens", "total", "wall_ms", "done"),
+        "one bounded prefill chunk of a long-prompt admission was "
+        "dispatched between macro launches (the SLO admission knob); "
+        "done=True marks the request's final chunk"),
     # -- ft: fault-tolerance runtime -----------------------------------------
     _ev("ft.straggler",
         ("timer", "step", "dt_s", "ema_s"),

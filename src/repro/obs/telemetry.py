@@ -21,14 +21,20 @@ attribute load and one branch -- no kwargs dict, no event record, zero
 allocations.  ``emit`` itself also checks, so un-guarded call sites are
 merely slower, never wrong.
 
-The recorder is single-writer by design (the serving/tuning stack is one
-host thread); exporters read snapshots (``events()``/``summary()``), so a
-reader racing the writer sees a consistent prefix at worst.
+The recorder is multi-writer: the pipelined serving loop emits from both
+the dispatch thread and the background decision worker, so every mutation
+(``emit``/``count``/``gauge``/``observe``) takes one shared lock.  The
+lock is uncontended in the common case (a handful of emissions per macro
+boundary) and sits behind the ``enabled`` fast-path check, so the
+disabled cost is still one attribute load and one branch.  Exporters read
+snapshots (``events()``/``summary()``), so a reader racing a writer sees
+a consistent prefix at worst.
 """
 from __future__ import annotations
 
 import math
 import os
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -138,6 +144,9 @@ class Recorder:
         self.gauges: Dict[str, float] = {}
         self.hists: Dict[str, Histogram] = {}
         self._t0 = time.monotonic()
+        # serialises writers: the pipelined serving loop emits from the
+        # dispatch thread AND the background decision worker
+        self._lock = threading.Lock()
 
     # -- events --------------------------------------------------------------
     def emit(self, etype: str, **fields: Any) -> None:
@@ -148,10 +157,11 @@ class Recorder:
         if etype not in EVENTS:
             raise KeyError(f"unregistered event type {etype!r}: add it to "
                            "repro.obs.events.EVENTS (and the docs taxonomy)")
-        seq = self._seq
-        self._ring[seq % self.capacity] = (
-            seq, time.monotonic() - self._t0, etype, fields)
-        self._seq = seq + 1
+        with self._lock:
+            seq = self._seq
+            self._ring[seq % self.capacity] = (
+                seq, time.monotonic() - self._t0, etype, fields)
+            self._seq = seq + 1
 
     @property
     def dropped(self) -> int:
@@ -181,20 +191,23 @@ class Recorder:
     def count(self, name: str, delta: float = 1.0) -> None:
         if not self.enabled:
             return
-        self.counters[name] = self.counters.get(name, 0.0) + delta
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0.0) + delta
 
     def gauge(self, name: str, value: float) -> None:
         if not self.enabled:
             return
-        self.gauges[name] = float(value)
+        with self._lock:
+            self.gauges[name] = float(value)
 
     def observe(self, name: str, value: float) -> None:
         if not self.enabled:
             return
-        h = self.hists.get(name)
-        if h is None:
-            h = self.hists[name] = Histogram()
-        h.observe(value)
+        with self._lock:
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = Histogram()
+            h.observe(value)
 
     def summary(self) -> Dict[str, Any]:
         """Counters, gauges and histogram summaries as one JSON-ready
@@ -211,12 +224,13 @@ class Recorder:
 
     def clear(self) -> None:
         """Drop all events and metrics (the ring keeps its capacity)."""
-        self._ring = [None] * self.capacity
-        self._seq = 0
-        self.counters.clear()
-        self.gauges.clear()
-        self.hists.clear()
-        self._t0 = time.monotonic()
+        with self._lock:
+            self._ring = [None] * self.capacity
+            self._seq = 0
+            self.counters.clear()
+            self.gauges.clear()
+            self.hists.clear()
+            self._t0 = time.monotonic()
 
 
 #: The process-global recorder every instrumented module reads through

@@ -1,0 +1,120 @@
+"""Background decision worker for the pipelined macro serving loop.
+
+The pipelined ``ContinuousBatcher`` (docs/serving.md, "Pipelined macro
+loop") moves the per-boundary control work -- the ``TieringManager``
+accounting, the tiering *plan* and the ``OnlineTuner`` update -- off the
+dispatch path onto this worker thread, so it runs concurrently with the
+next in-flight device scan.  The hand-off is deterministic by
+construction:
+
+  * the dispatch thread ``submit``s exactly one mass snapshot per macro
+    boundary and later blocks in ``wait`` for that generation's result;
+  * the worker consumes submissions strictly in order and publishes
+    exactly one result per generation;
+  * between ``wait(g)`` returning and the next ``submit(g+1)`` the
+    worker is provably idle (it finished generation ``g`` and has
+    nothing queued), so the dispatch thread may touch the shared
+    manager/tuner state in that window without locks.
+
+That strict alternation is the documented **stale-by-one contract**: the
+decision computed from macro ``k``'s masses is waited on -- and applied
+-- in the overlap window of macro ``k+1``, i.e. it takes effect for
+macro ``k+2``'s launch.  The dispatch path never blocks on the tuner at
+launch time; it blocks only behind an already-launched scan.
+
+The worker is deliberately generic (it runs any ``fn(payload)``), so the
+hand-off protocol is testable without a model (tests/test_pipeline.py
+hammers it from a fake dispatch thread).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional, Tuple
+
+__all__ = ["DecisionWorker"]
+
+
+class DecisionWorker:
+    """One background thread turning boundary snapshots into decisions.
+
+    ``submit(payload)`` enqueues a snapshot and returns its generation
+    number; ``wait(generation)`` blocks until that generation's
+    ``fn(payload)`` result is published and returns ``(result,
+    waited_seconds)``.  Exceptions raised by ``fn`` are re-raised in
+    ``wait`` (the dispatch thread is the error domain; the worker never
+    dies silently).  ``close()`` drains and joins the thread.
+    """
+
+    def __init__(self, fn: Callable[[Any], Any], *,
+                 name: str = "decision-worker"):
+        self._fn = fn
+        self._inbox: "queue.Queue[Optional[Tuple[int, Any]]]" = queue.Queue()
+        self._results: dict = {}
+        self._errors: dict = {}
+        self._cv = threading.Condition()
+        self._next_gen = 0
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # -- dispatch-thread API -------------------------------------------------
+    def submit(self, payload: Any) -> int:
+        """Enqueue one boundary snapshot; returns its generation number."""
+        if self._closed:
+            raise RuntimeError("DecisionWorker is closed")
+        gen = self._next_gen
+        self._next_gen += 1
+        self._inbox.put((gen, payload))
+        return gen
+
+    def wait(self, generation: int,
+             timeout: Optional[float] = None) -> Tuple[Any, float]:
+        """Block until ``generation``'s decision is published.  Returns
+        ``(result, waited_seconds)``; re-raises the worker's exception if
+        ``fn`` failed on that generation."""
+        t0 = time.monotonic()
+        with self._cv:
+            while (generation not in self._results
+                   and generation not in self._errors):
+                if not self._cv.wait(timeout=timeout):
+                    raise TimeoutError(
+                        f"decision generation {generation} not published "
+                        f"within {timeout}s")
+            if generation in self._errors:
+                raise self._errors.pop(generation)
+            return self._results.pop(generation), time.monotonic() - t0
+
+    def close(self) -> None:
+        """Stop the worker: no further submits; pending work is drained."""
+        if self._closed:
+            return
+        self._closed = True
+        self._inbox.put(None)
+        self._thread.join(timeout=30.0)
+
+    # -- worker thread -------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            item = self._inbox.get()
+            if item is None:
+                return
+            gen, payload = item
+            try:
+                result, err = self._fn(payload), None
+            except BaseException as e:          # published, not swallowed
+                result, err = None, e
+            with self._cv:
+                if err is None:
+                    self._results[gen] = result
+                else:
+                    self._errors[gen] = err
+                self._cv.notify_all()
+
+    def __enter__(self) -> "DecisionWorker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

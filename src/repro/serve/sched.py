@@ -71,6 +71,7 @@ from repro.memtier.tiering import (PAGE_DROP, SharedPagedPools,
 from repro.models import model as mdl
 from repro.obs import telemetry as _obs
 from repro.serve import engine as E
+from repro.serve.pipeline import DecisionWorker
 
 __all__ = ["Request", "TrafficMonitor", "ContinuousBatcher",
            "TrafficScheduler", "WORKLOAD_KINDS"]
@@ -127,7 +128,12 @@ class TrafficMonitor:
         per-token cost comparable across period lengths.  ``fetched``
         demand-fetch page misses are charged INSIDE the cost window (the
         macro path prefetches its horizon up front -- those misses are
-        the price of the current period and must reach the tuner).
+        the price of the current period and must reach the tuner).  They
+        are priced at ``fetch_cost``, not ``miss_penalty``: the pools
+        batch every ``ensure_resident`` call's host->HBM copies into one
+        gathered transfer, so a prefetched page is cheaper than the
+        synchronous mid-decode stall ``miss_penalty`` models.  Every
+        fetch path routes through here so the pricing cannot fork.
         ``force_tier`` tiers regardless of the step cadence.
 
         The tuner's adversarial-traffic defenses (cost-spike guardrail,
@@ -145,7 +151,7 @@ class TrafficMonitor:
         before = mgr.modeled_time
         if fetched:
             mgr.misses += fetched
-            mgr.modeled_time += fetched * mgr.cfg.miss_penalty
+            mgr.modeled_time += fetched * mgr.cfg.fetch_cost
         mgr.on_step(global_mass, self.pools.resident_mask,
                     weight=float(n_tokens or 1))
         mgr.maybe_tier(self.pools, active=self.pools.allocated_mask,
@@ -176,6 +182,52 @@ class TrafficMonitor:
         demand-fetch count, charged inside the tuner's cost window."""
         return self.on_step(global_mass, n_active, n_tokens=n_tokens,
                             force_tier=True, fetched=fetched)
+
+    def plan_step(self, global_mass: np.ndarray,
+                  n_active: Optional[float] = None, *,
+                  n_tokens: int = 1, fetched: int = 0,
+                  resident: Optional[np.ndarray] = None,
+                  n_free: int = 0,
+                  active: Optional[np.ndarray] = None,
+                  planes: int = 2):
+        """The *worker half* of a pipelined macro boundary: identical
+        accounting to ``on_macro_step`` (NaN clamp, fetch charge, manager
+        feed, tuner update) except tiering stops at ``plan_tier`` -- no
+        pool mutation -- so the whole call can run on the background
+        ``DecisionWorker`` while the next scan is in flight.
+
+        ``resident``/``n_free``/``active`` are snapshots the dispatch
+        thread took at the boundary (the pools move on between plan and
+        apply; ``TieringManager.apply_plan`` revalidates against the live
+        state).  Thread-safety comes from the worker's strict-alternation
+        protocol, not locks: the dispatch thread only touches the
+        manager/tuner between ``wait`` and the next ``submit``, when the
+        worker is idle.  Returns ``(period, plan)`` where ``plan`` is the
+        ``(bring, evict)`` pair for ``apply_decision``."""
+        mgr = self.manager
+        if not np.all(np.isfinite(global_mass)):
+            global_mass = np.nan_to_num(global_mass, nan=0.0,
+                                        posinf=0.0, neginf=0.0)
+        before = mgr.modeled_time
+        if fetched:
+            mgr.misses += fetched
+            mgr.modeled_time += fetched * mgr.cfg.fetch_cost
+        mgr.on_step(global_mass, resident, weight=float(n_tokens or 1))
+        plan = mgr.plan_tier(resident, n_free, active=active,
+                             planes=planes, force=True)
+        if self.tuner is not None:
+            cost = mgr.modeled_time - before
+            if n_active is not None:
+                cost /= max(1, n_active)
+            mgr.set_period(self.tuner.on_step(global_mass, cost=cost,
+                                              dt=n_tokens or 1))
+        return mgr.period, plan
+
+    def apply_decision(self, plan) -> None:
+        """The *dispatch half*: actuate a worker-planned tiering move on
+        the live pools (``apply_plan`` revalidates each page first)."""
+        if plan is not None:
+            self.manager.apply_plan(self.pools, *plan)
 
     def release(self, gids: np.ndarray) -> None:
         """Retire a request's pages everywhere: pool slots freed, manager
@@ -216,10 +268,35 @@ class Request:
     done: bool = False
     _key: Optional[jax.Array] = None
     _i: int = 0                        # decode iterations done
+    # pipelined admission: the lazily-sampled first token (a [1] device
+    # array still chained behind the prefill) whose host bookkeeping --
+    # the int() download, the tokens append, the emit -- is deferred to
+    # the next macro boundary so activation never blocks the launch
+    _first_tok: object = None
 
     @property
     def total_len(self) -> int:
         return len(self.prompt) + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _PendingAdmit:
+    """A reserved-but-not-yet-active admission of the pipelined loop:
+    the row and pages are held (the HBM admission gate counts them) and
+    the prefill is dispatched -- packed before the same boundary's
+    launch, or chunk-by-chunk inside overlap windows for long prompts --
+    after which the row activates lazily (the first-token sample chains
+    behind the prefill; only its bookkeeping waits for a boundary)."""
+
+    req: Request
+    plen: int
+    chunked: bool = False
+    past: object = None          # accumulated chunk cache (chunked only)
+    next_start: int = 0          # absolute position of the next chunk
+    chunk_idx: int = 0
+    logits: object = None        # lazy [1, 1, V] first-token logits
+    ready: bool = False
+    t_submit: float = 0.0
 
 
 class ContinuousBatcher:
@@ -275,6 +352,22 @@ class ContinuousBatcher:
       and, with ``mirror_pages=True``, that layer's pages are
       write-through mirrored into the shared pool for ``paged_context``.
 
+    With ``pipeline=True`` (macro mode only) the loop runs as a software
+    pipeline: each scheduler step completes the *previous* macro, then
+    launches the next one and does the boundary's host work -- tiering
+    decision apply, admission prefill, next-horizon prefetch, table
+    staging -- in the **overlap window** behind the in-flight scan
+    (docs/serving.md, "Pipelined macro loop").  Tiering/tuner decisions
+    move to a background ``DecisionWorker`` and land one boundary late
+    (the stale-by-one contract); ``admit_chunk_tokens`` bounds how much
+    long-prompt prefill any single window dispatches (the SLO admission
+    knob; ``None`` keeps whole-prompt packed admission).  Overlap only
+    changes *when* work happens, never *what* is computed: the emitted
+    streams are token-identical to the synchronous loop.  In pipelined
+    mode ``paged_context`` probes and manager/tuner reads are only safe
+    between ``step()`` calls after ``run()`` returned (the worker may be
+    mid-decision otherwise); call ``close()`` to tear the worker down.
+
     ``cond`` ([T, d] or [1, T, d]) is the serving session's shared
     cross-attention conditioning (musicgen-style archs); ``extra_embeds``
     ([prefix_len, d] or [1, prefix_len, d]) is the shared prefix, required
@@ -289,6 +382,8 @@ class ContinuousBatcher:
                  paged_impl: str = "reference",
                  macro: Optional[bool] = None,
                  macro_steps: Optional[int] = None,
+                 pipeline: bool = False,
+                 admit_chunk_tokens: Optional[int] = None,
                  cond=None, extra_embeds=None):
         self.params, self.cfg = params, cfg
         self.page_size = page_size
@@ -341,6 +436,22 @@ class ContinuousBatcher:
             raise ValueError("macro-step decode runs on the fully-paged "
                              "path only")
         self.macro_steps = macro_steps
+        # pipelined macro loop (opt-in): the synchronous loop stays the
+        # measured baseline and keeps its pinned per-step contracts
+        self.pipeline = bool(pipeline)
+        if self.pipeline and not self.macro:
+            raise ValueError("pipeline=True needs macro-step decode (the "
+                             "overlap window is the macro's flight time)")
+        self.admit_chunk_tokens = admit_chunk_tokens
+        if admit_chunk_tokens is not None:
+            if admit_chunk_tokens < 1:
+                raise ValueError("admit_chunk_tokens must be >= 1")
+            # page-aligned chunks: every pool page is written by exactly
+            # one chunk's scatter
+            self._chunk_width = -(-admit_chunk_tokens // page_size) \
+                * page_size
+        else:
+            self._chunk_width = None
         # the write-through mirror needs the LEGACY single-layer arrays;
         # a layered-only pool is physical but has no k_host/k_hbm pair
         self.mirror_pages = (not self.paged) and mirror_pages \
@@ -366,6 +477,21 @@ class ContinuousBatcher:
         self.queue: "collections.deque[Request]" = collections.deque()
         self.step_idx = 0
         self.completed: List[Request] = []
+
+        # epoch-keyed device table cache: (pools.slot_epoch, _rows_epoch)
+        # unchanged => the staged upload is reused (a buffer swap), so a
+        # boundary where tiering moved nothing skips the rebuild+upload
+        self._rows_epoch = 0
+        self._tables_key = None
+        self._tables_dev = None
+        # pipelined-loop state (inert when pipeline=False)
+        self._inflight: Optional[Dict] = None
+        self._pending_admits: List[_PendingAdmit] = []
+        self._prefetched_next = 0
+        self._decision_gen: Optional[int] = None
+        self._chunk_fns: Dict[int, Callable] = {}
+        self._decision_worker = (DecisionWorker(self._plan_decision)
+                                 if self.pipeline else None)
 
         if self.paged:
             pools = monitor.pools
@@ -544,6 +670,7 @@ class ContinuousBatcher:
         self._gid_tables[req.row] = row
         req.table_gids = np.concatenate(parts)
         req.mass_cols = np.concatenate(cols).astype(np.int64)
+        self._rows_epoch += 1
 
     def _slot_table(self, rows: Sequence[int]) -> np.ndarray:
         """Physical HBM slot tables for the given rows, derived from the
@@ -556,6 +683,30 @@ class ContinuousBatcher:
             m = g >= 0
             tables[row, m] = pools.table(g[m])
         return tables
+
+    def _tables_for(self, rows: Sequence[int]):
+        """Device-side ``(slot_table, gid_table)`` pair for a decode
+        launch, cached across boundaries: rebuilt and re-uploaded only
+        when tiering re-slotted a page (``pools.slot_epoch``) or the
+        row->page mapping changed (admission/retire/activation bump
+        ``_rows_epoch``).  A boundary where tiering moved zero pages
+        becomes a buffer swap; the ``pool.table_upload.performed`` /
+        ``.skipped`` counters measure the split.  ``rows`` is implied by
+        the epochs (every active-set change bumps ``_rows_epoch``), so
+        the key needs no row list."""
+        pools = self.monitor.pools
+        key = (int(getattr(pools, "slot_epoch", 0)), self._rows_epoch)
+        track = (r := _obs.RECORDER).enabled
+        if self._tables_key == key and self._tables_dev is not None:
+            if track:
+                r.count("pool.table_upload.skipped")
+            return self._tables_dev
+        self._tables_dev = (jnp.asarray(self._slot_table(rows)),
+                            jnp.asarray(self._gid_tables))
+        self._tables_key = key
+        if track:
+            r.count("pool.table_upload.performed")
+        return self._tables_dev
 
     def _need(self, pos_np: np.ndarray, horizon: int,
               per_row: Optional[Dict[int, int]] = None) -> np.ndarray:
@@ -779,17 +930,23 @@ class ContinuousBatcher:
         """One scheduler step: admit (one packed prefill), monitor+tier,
         decode the request set, sample, retire.  Returns the (rid, token)
         pairs emitted this step, including the prefill-sampled first token
-        of newly admitted requests."""
+        of newly admitted requests.  In pipelined mode a step instead
+        completes the PREVIOUS in-flight macro, launches the next one and
+        fills the overlap window behind it, so tokens surface one step
+        after their macro launched."""
         track = (r := _obs.RECORDER).enabled
         t0 = time.monotonic() if track else 0.0
-        emitted = self._admit()
-        self.step_idx += 1
-        if self.active:
-            if self.paged:
-                emitted += (self._step_paged_macro() if self.macro
-                            else self._step_paged())
-            else:
-                emitted += self._step_dense()
+        if self.pipeline:
+            emitted = self._step_pipelined()
+        else:
+            emitted = self._admit()
+            self.step_idx += 1
+            if self.active:
+                if self.paged:
+                    emitted += (self._step_paged_macro() if self.macro
+                                else self._step_paged())
+                else:
+                    emitted += self._step_dense()
         if track:
             r.observe("serve.step_s", time.monotonic() - t0)
         return emitted
@@ -830,34 +987,33 @@ class ContinuousBatcher:
         set, run every attention layer off the shared slot pool, feed the
         monitor the ALL-layer masses, sample, retire."""
         pools = self.monitor.pools
-        mgr = self.monitor.manager
         pos_np = np.asarray(self.pos)
 
         # every page this step's decode can touch (shared prefix, token
         # pages incl. the write page, the state page) must be
         # HBM-resident; re-fetches after eviction are on-demand host
-        # reads and charged as misses
+        # reads, charged inside the monitor feed below (fetch_cost: the
+        # pools batch the copies into one gathered transfer)
         fetched = pools.ensure_resident(self._need(pos_np, 1))
-        mgr.misses += fetched
-        mgr.modeled_time += fetched * mgr.cfg.miss_penalty
 
-        # page tables are rebuilt each step: tiering may have re-slotted
-        # any resident page since the last one
-        tables = self._slot_table(list(self.active))
+        # page tables re-upload only when a page re-slotted or the row
+        # mapping changed since the last step (epoch-keyed cache)
+        tables_dev, gids_dev = self._tables_for(list(self.active))
         cur = np.full((self.max_active,), -1, np.int32)
         for row in self.active:
             cur[row] = pos_np[row]
 
         logits, kv, masses = self._paged_fn(
-            pools.kv_view(), jnp.asarray(tables),
-            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
-            cond=self._cond_rows, state_cols=self._state_cols)
+            pools.kv_view(), tables_dev, gids_dev, self.tok,
+            jnp.asarray(cur), cond=self._cond_rows,
+            state_cols=self._state_cols)
         pools.set_kv(kv)
         masses = np.asarray(masses)
         merged = self.monitor.merge(
             [(r.table_gids, masses[r.row][r.mass_cols])
              for r in self.active.values()])
-        self.monitor.on_step(merged, n_active=len(self.active))
+        self.monitor.on_step(merged, n_active=len(self.active),
+                             fetched=fetched)
 
         self.pos = self.pos + 1
         emitted: List[Tuple[int, int]] = []
@@ -895,15 +1051,33 @@ class ContinuousBatcher:
         tables once per macro step and downloads (tokens, summed mass,
         finished flags) once -- between tiering boundaries the loop is
         device-resident, and ``TrafficMonitor.merge`` collapses to one
-        call per movement period."""
+        call per movement period.  (The pipelined loop splits the same
+        launch/complete halves across scheduler steps so the boundary
+        host work runs behind the in-flight scan.)"""
+        emitted, _ = self._macro_complete(self._macro_launch(), sync=True)
+        return emitted
+
+    def _macro_launch(self) -> Dict:
+        """Dispatch one macro scan over the current request set and
+        return the in-flight record WITHOUT blocking on the result: the
+        outputs (tokens, state, the donated-in/returned kv pytree) are
+        lazy.  ``pools.set_kv`` publishes the lazy kv immediately, so
+        any pool work dispatched before the blocking download -- the
+        pipelined prefetch, a tiering apply, an admission chunk's page
+        scatter -- consumes these arrays and therefore chains *after*
+        the scan on device.  That data dependency is the entire overlap
+        mechanism: host work reorders freely, device work cannot."""
         pools = self.monitor.pools
-        mgr = self.monitor.manager
         pos_np = np.asarray(self.pos)
         rows = list(self.active.items())
 
-        period = self.macro_steps or mgr.period
-        max_rem = max(req.max_new_tokens - len(req.tokens)
-                      for _, req in rows)
+        period = self.macro_steps or self.monitor.manager.period
+        # a lazily-admitted row's first token is still in flight: it
+        # counts against the budget (the device's emitted/eos init check
+        # relies on it) but is not in req.tokens yet
+        ect = {row: len(req.tokens) + (req._first_tok is not None)
+               for row, req in rows}
+        max_rem = max(req.max_new_tokens - ect[row] for row, req in rows)
         # The scan length is pow2-bucketed on BOTH sides -- the pow2
         # floor of the live period (a non-pow2 period quantises to
         # slightly shorter macros rather than minting a compile per
@@ -922,14 +1096,21 @@ class ContinuousBatcher:
         # reads, charged as misses inside the monitor feed below so the
         # tuner's cost window sees them (they are the price of the
         # current period).
-        horizons = {row: min(n_steps, req.max_new_tokens - len(req.tokens))
+        horizons = {row: min(n_steps, req.max_new_tokens - ect[row])
                     for row, req in rows}
         fetched = pools.ensure_resident(
             self._need(pos_np, n_steps, per_row=horizons))
+        # pages the pipelined overlap window already prefetched for this
+        # macro count toward ITS fetch bill (they are the price of the
+        # period, wherever the copy was dispatched)
+        fetched += self._prefetched_next
+        self._prefetched_next = 0
 
-        # page tables upload once per macro step: tiering only runs at
-        # macro boundaries, so no page can re-slot mid-macro
-        tables = self._slot_table([row for row, _ in rows])
+        # page tables upload once per macro step (tiering only runs at
+        # macro boundaries, so no page can re-slot mid-macro) -- and only
+        # when something actually changed since the last upload
+        # (epoch-keyed cache; otherwise the staged buffer is swapped in)
+        tables_dev, gids_dev = self._tables_for([row for row, _ in rows])
         cur = np.full((self.max_active,), -1, np.int32)
         keys = np.zeros((self.max_active, 2), np.uint32)
         iters = np.zeros((self.max_active,), np.int32)
@@ -941,7 +1122,7 @@ class ContinuousBatcher:
             cur[row] = pos_np[row]
             keys[row] = np.asarray(req._key, np.uint32)
             iters[row] = req._i
-            emitted_ct[row] = len(req.tokens)
+            emitted_ct[row] = ect[row]
             max_new[row] = req.max_new_tokens
             eos[row] = -1 if req.eos_id is None else req.eos_id
             temps[row] = req.temperature
@@ -949,14 +1130,29 @@ class ContinuousBatcher:
         n_flags = len(self.macro_timer.stragglers)
         self.macro_timer.start()
         toks, kv, st = self._macro_fn(n_steps)(
-            pools.kv_view(), jnp.asarray(tables),
-            jnp.asarray(self._gid_tables), self.tok, jnp.asarray(cur),
-            jnp.asarray(keys), jnp.asarray(iters), jnp.asarray(emitted_ct),
-            jnp.asarray(max_new), jnp.asarray(eos), jnp.asarray(temps),
+            pools.kv_view(), tables_dev, gids_dev, self.tok,
+            jnp.asarray(cur), jnp.asarray(keys), jnp.asarray(iters),
+            jnp.asarray(emitted_ct), jnp.asarray(max_new),
+            jnp.asarray(eos), jnp.asarray(temps),
             cond=self._cond_rows, state_cols=self._state_cols)
         pools.set_kv(kv)
+        return {"toks": toks, "st": st, "rows": rows, "n_steps": n_steps,
+                "fetched": fetched, "n_flags": n_flags,
+                "horizons": horizons, "pos_np": pos_np}
 
-        toks_np = np.asarray(toks)
+    def _macro_complete(self, fl: Dict, sync: bool
+                        ) -> Tuple[List[Tuple[int, int]], Optional[Dict]]:
+        """Block on an in-flight macro's downloads and run the boundary:
+        merge masses, restore device-side row state, append/emit tokens,
+        retire finished requests.  ``sync=True`` (the synchronous loop)
+        feeds the monitor inline -- tier + tune before the next launch.
+        ``sync=False`` (the pipelined loop) instead returns the
+        monitor-feed payload for the caller to hand to the
+        ``DecisionWorker`` *after* the boundary's remaining manager
+        touches (retire/release, activation) are done -- the worker's
+        strict-alternation safety window."""
+        st, rows, n_steps = fl["st"], fl["rows"], fl["n_steps"]
+        toks_np = np.asarray(fl["toks"])
         mass_sum = np.asarray(st["mass_sum"])
         alive_steps = np.asarray(st["alive_steps"])
         stopped = np.asarray(st["stopped"])
@@ -964,7 +1160,7 @@ class ContinuousBatcher:
         # the downloads above force the device sync: the stop covers the
         # whole launch + transfer, which is what a straggler would slow
         macro_wall = self.macro_timer.stop(self.step_idx)
-        straggler = len(self.macro_timer.stragglers) > n_flags
+        straggler = len(self.macro_timer.stragglers) > fl["n_flags"]
 
         # ONE merge + monitor feed per movement period (mean mass over
         # the steps each row actually ran, so the per-step scale the
@@ -977,13 +1173,34 @@ class ContinuousBatcher:
               / max(1, int(alive_steps[r.row])))
              for _, r in rows])
         dt = max(1, int(alive_steps.max()))
-        self.monitor.on_macro_step(
-            merged, n_active=float(alive_steps.sum()) / dt, n_tokens=dt,
-            fetched=fetched)
+        n_active = float(alive_steps.sum()) / dt
+        payload: Optional[Dict] = None
+        if sync:
+            self.monitor.on_macro_step(merged, n_active=n_active,
+                                       n_tokens=dt, fetched=fl["fetched"])
+        else:
+            # boundary snapshots for the worker's plan (apply_plan
+            # revalidates against whatever moves before actuation)
+            pools = self.monitor.pools
+            payload = dict(global_mass=merged, n_active=n_active,
+                           n_tokens=dt, fetched=fl["fetched"],
+                           resident=pools.slot_of >= 0,
+                           n_free=int((pools.page_of_slot < 0).sum()),
+                           active=pools.allocated_mask,
+                           planes=int(getattr(pools, "move_planes", 2)))
 
         self.pos = st["pos"]
         self.tok = st["last_tok"]
         emitted: List[Tuple[int, int]] = []
+        # resolve lazily-admitted rows' deferred first tokens: the
+        # sample fed this macro's scan, so the download is a no-wait
+        # read; it precedes the row's macro tokens in the stream
+        for row, req in rows:
+            if req._first_tok is not None:
+                tk = int(req._first_tok[0])
+                req._first_tok = None
+                req.tokens.append(tk)
+                emitted.append((req.rid, tk))
         for t in range(toks_np.shape[0]):
             for row, req in rows:
                 tk = int(toks_np[t, row])
@@ -997,21 +1214,366 @@ class ContinuousBatcher:
                 self._retire(req)
         if (r := _obs.RECORDER).enabled:
             r.emit("serve.macro", step=self.step_idx, n_steps=int(n_steps),
-                   tokens=len(emitted),
-                   active=float(alive_steps.sum()) / dt,
-                   fetched=int(fetched), wall_ms=macro_wall * 1e3,
+                   tokens=len(emitted), active=n_active,
+                   fetched=int(fl["fetched"]), wall_ms=macro_wall * 1e3,
                    straggler=straggler)
             r.count("serve.tokens", len(emitted))
+        return emitted, payload
+
+    # -- the pipelined macro loop --------------------------------------------
+    def _plan_decision(self, payload: Dict):
+        """Runs on the DecisionWorker thread.  Strict alternation (the
+        dispatch thread only touches the manager/tuner between ``wait``
+        and the next ``submit``) makes this lock-free by construction."""
+        return self.monitor.plan_step(**payload)
+
+    def _step_pipelined(self) -> List[Tuple[int, int]]:
+        """One pipelined scheduler step.  Deterministic fixed order:
+
+        1. complete the previous in-flight macro (blocking download,
+           token append incl. deferred first tokens, retire) -- the
+           worker is idle here, so the retire path's manager/tuner
+           touches are safe;
+        2. reserve new admissions off the queue (rows/pages held, same
+           HBM gate as the synchronous loop);
+        3. dispatch the packed prefill for the fresh reservations (an
+           async device dispatch -- the host never waits on it);
+        4. activate every ready admission LAZILY: the first-token sample
+           is pure jnp chained behind its prefill, so a request joins
+           the SAME macro its reservation preceded -- no one-macro
+           utilisation hole -- and only the int() bookkeeping waits for
+           the next boundary (``Request._first_tok``);
+        5. launch the next macro over the active set (placement/period
+           from the LAST boundary's applied decision -- stale-by-one);
+        6. submit the completed macro's masses to the decision worker;
+        7. the overlap window: wait+apply the previous decision, advance
+           chunked admissions, prefetch the next horizon, stage tables
+           -- all behind the scan launched in (5)."""
+        fl, self._inflight = self._inflight, None
+        emitted: List[Tuple[int, int]] = []
+        payload = None
+        if fl is not None:
+            emitted, payload = self._macro_complete(fl, sync=False)
+        self.step_idx += 1
+        self._admit_reserve()
+        self._admit_prefill_fresh()
+        emitted += self._admit_activate()
+        if self.active:
+            self._inflight = self._macro_launch()
+        if payload is not None:
+            self._decision_gen = self._decision_worker.submit(payload)
+        self._pipeline_overlap()
         return emitted
+
+    def _pipeline_overlap(self) -> None:
+        """The overlap window: host-side boundary work dispatched while
+        the just-launched scan (if any) runs on device -- every device
+        op here consumes the scan's lazy kv outputs and so chains after
+        it.  Fixed stage order: the decision apply first (it moves
+        placement), chunked-admission progress next, the prefetch last
+        (it re-fetches anything the earlier stages evicted), then the
+        table staging."""
+        track = (r := _obs.RECORDER).enabled
+        if self._decision_gen is not None:
+            gen, self._decision_gen = self._decision_gen, None
+            t0 = time.monotonic()
+            (period, plan), waited = self._decision_worker.wait(gen)
+            self.monitor.apply_decision(plan)
+            if track:
+                r.emit("serve.pipeline.decision", step=self.step_idx,
+                       generation=gen, period=int(period),
+                       bring=0 if plan is None else int(len(plan[0])),
+                       evict=0 if plan is None else int(len(plan[1])),
+                       wait_ms=waited * 1e3)
+                r.emit("serve.pipeline.stage", step=self.step_idx,
+                       stage="decision_wait",
+                       wall_ms=(time.monotonic() - t0) * 1e3)
+        if any(p.chunked and not p.ready for p in self._pending_admits):
+            t0 = time.monotonic()
+            self._admit_chunks()
+            if track:
+                r.emit("serve.pipeline.stage", step=self.step_idx,
+                       stage="admit",
+                       wall_ms=(time.monotonic() - t0) * 1e3)
+        fl = self._inflight
+        if fl is None:
+            return
+        # conservative prefetch for the NEXT macro: through this macro's
+        # per-row horizon plus one more macro of the same length, capped
+        # by each row's remaining budget.  Opportunistic, not a residency
+        # guarantee -- the next launch's ensure_resident still backstops
+        # (and if the pending decision changes the period, it picks up
+        # the difference there, charged as launch-time fetches).
+        t0 = time.monotonic()
+        n_next = fl["n_steps"]
+        per_row = {row: min(fl["horizons"][row] + n_next,
+                            req.max_new_tokens - len(req.tokens))
+                   for row, req in fl["rows"]}
+        self._prefetched_next += self.monitor.pools.ensure_resident(
+            self._need(fl["pos_np"], 0, per_row=per_row))
+        if track:
+            r.emit("serve.pipeline.stage", step=self.step_idx,
+                   stage="prefetch",
+                   wall_ms=(time.monotonic() - t0) * 1e3)
+        # stage the next boundary's tables: if nothing above re-slotted a
+        # page, the next launch's _tables_for is a pure buffer swap
+        t0 = time.monotonic()
+        self._tables_for([row for row, _ in fl["rows"]])
+        if track:
+            r.emit("serve.pipeline.stage", step=self.step_idx,
+                   stage="tables",
+                   wall_ms=(time.monotonic() - t0) * 1e3)
+
+    def _admit_reserve(self) -> None:
+        """Pop admittable requests into the pending set: rows and pages
+        are reserved NOW (the HBM admission gate counts them, same rule
+        as ``_admit``), but the prefill runs inside overlap windows and
+        the row only activates at a macro boundary."""
+        pools = self.monitor.pools
+        while self.queue and self.rows_free:
+            req = self.queue[0]
+            n_exact = self._pages_exact(req)
+            n_alloc = self._pages_alloc(req)
+            if self._hbm_need + n_exact > pools.hbm_pages:
+                break              # head-of-line: keep arrival order
+            gids = pools.alloc(n_alloc, req.rid)
+            if gids is None:       # head-of-line: keep arrival order
+                break
+            self.queue.popleft()
+            row = self.rows_free.pop()
+            req.row, req.gids, req.n_pages = row, gids, n_exact
+            req.n_alloc = n_alloc
+            self._hbm_need += n_exact
+            self._map_row(req)
+            plen = len(req.prompt)
+            # chunking needs prefill_chunk's contract: batched-prefill
+            # arch, no shared prefix (chunk-local positions must be
+            # absolute), no extra embeds (prefill_chunk takes none)
+            chunked = (self._chunk_width is not None
+                       and self._batched_prefill and self.prefix == 0
+                       and self._ex is None and plen > self._chunk_width)
+            self._pending_admits.append(_PendingAdmit(
+                req=req, plen=plen, chunked=chunked,
+                t_submit=time.monotonic()))
+        if (r := _obs.RECORDER).enabled:
+            r.gauge("serve.queue_depth", len(self.queue))
+
+    def _admit_prefill_fresh(self) -> None:
+        """Boundary-side admission dispatch: one packed prefill over
+        every fresh non-chunked reservation, with NO sample sync -- the
+        logits stay lazy, so the host moves straight on to the macro
+        launch and the scan chains after the prefill's page scatter on
+        device (exactly the ordering the synchronous loop gets, minus
+        the host stall)."""
+        fresh = [p for p in self._pending_admits
+                 if not p.ready and not p.chunked and p.logits is None]
+        if not fresh:
+            return
+        if self._batched_prefill:
+            self._dispatch_packed_prefill(fresh)
+        else:                   # recurrent state: one request at a time
+            for p in fresh:
+                prompt = jnp.asarray(p.req.prompt, jnp.int32)[None]
+                logits, cache1 = mdl.prefill(
+                    self.params, self.cfg, prompt, cond=self._cond,
+                    extra_embeds=self._ex)
+                self._write_prefill_pages_row(cache1, p.req, p.plen)
+                p.logits = logits
+                p.ready = True
+
+    def _admit_chunks(self) -> None:
+        """Overlap-window admission work: ONE bounded chunk per chunked
+        admission, dispatched behind the in-flight scan so long-prompt
+        prefill never delays a launch.  ``admit_chunk_tokens`` is the
+        SLO knob: it caps how much prefill compute any single window
+        puts in front of the next boundary, trading admission latency
+        for boundary stall."""
+        for p in self._pending_admits:
+            if p.chunked and not p.ready:
+                self._dispatch_chunk(p)
+
+    def _dispatch_packed_prefill(self, pending: List[_PendingAdmit]
+                                 ) -> None:
+        """Dispatch one packed prefill for a window's non-chunked pending
+        admissions -- the same pow2-bucketed pass as ``_prefill``, minus
+        the sampling sync (the lazy logits ride in the pending record
+        until the boundary)."""
+        plens = [p.plen for p in pending]
+        smax = bucket_pages(max(plens))
+        jp = bucket_pages(len(pending))
+        toks = np.zeros((jp, smax), np.int32)
+        plens_p = np.ones((jp,), np.int32)
+        for i, p in enumerate(pending):
+            toks[i, : plens[i]] = p.req.prompt
+            plens_p[i] = self.prefix + plens[i]
+        kw = {}
+        if self._cond is not None:
+            kw["cond"] = jnp.broadcast_to(
+                self._cond, (jp,) + self._cond.shape[1:])
+        if self._ex is not None:
+            kw["extra_embeds"] = jnp.broadcast_to(
+                self._ex, (jp,) + self._ex.shape[1:])
+        logits_b, cache_b = self._prefill_fn(
+            jnp.asarray(toks), jnp.asarray(plens_p), **kw)
+        self._write_prefill_pages_batched(cache_b,
+                                          [p.req for p in pending], plens)
+        for i, p in enumerate(pending):
+            p.logits = logits_b[i: i + 1]
+            p.ready = True
+
+    def _chunk_fn(self, start: int) -> Callable:
+        """Jitted ``prefill_chunk`` per (static) chunk start; the
+        compile cache is bounded by ``max_len / chunk_width``."""
+        fn = self._chunk_fns.get(start)
+        if fn is None:
+            fn = jax.jit(functools.partial(mdl.prefill_chunk, self.params,
+                                           self.cfg, start=start))
+            self._chunk_fns[start] = fn
+        return fn
+
+    def _dispatch_chunk(self, p: _PendingAdmit) -> None:
+        """Dispatch ONE bounded chunk of a long-prompt admission: a
+        width-``_chunk_width`` slice of the prompt forward-passed against
+        the accumulated past, its pages scattered into the pool, the
+        past extended -- all lazy, queueing behind the in-flight scan.
+        The chunk containing the prompt's final position contributes the
+        first-token logits; the last chunk marks the admission ready."""
+        t0 = time.monotonic()
+        c = self._chunk_width
+        lo = p.next_start
+        w = min(c, p.plen - lo)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :w] = p.req.prompt[lo: lo + w]
+        kw = {}
+        if self._cond is not None:
+            kw["cond"] = self._cond
+        logits, cc = self._chunk_fn(lo)(
+            jnp.asarray(toks), jnp.asarray([p.plen], jnp.int32), p.past,
+            **kw)
+        self._write_chunk_pages(p.req, cc, lo, p.plen)
+        if lo <= p.plen - 1 < lo + c:
+            p.logits = logits
+        p.next_start = lo + c
+        p.chunk_idx += 1
+        done = p.next_start >= p.plen
+        p.past = None if done else mdl.chunk_past_extend(p.past, cc)
+        if done:
+            p.ready = True
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.pipeline.admit_chunk", step=self.step_idx,
+                   rid=p.req.rid, chunk=p.chunk_idx - 1, tokens=int(w),
+                   total=p.plen, wall_ms=(time.monotonic() - t0) * 1e3,
+                   done=done)
+
+    def _write_chunk_pages(self, req: Request, cache_chunk, lo: int,
+                           plen: int) -> None:
+        """Scatter one admission chunk's cache into the request's pages.
+        Chunk starts and widths are page-aligned (the constructor rounds
+        ``admit_chunk_tokens`` up), so every page is written by exactly
+        one chunk; the final page's tail beyond ``plen`` carries padding
+        garbage masked attention never reads (as in the packed
+        scatter).  Chunked admission is gated to prefix-free configs, so
+        chunk-local positions ARE absolute cache positions."""
+        pools = self.monitor.pools
+        ps = self.page_size
+        npg = self._chunk_width // ps
+        p0 = lo // ps
+        n_valid = min(npg, -(-(plen - lo) // ps))
+        gids_m = np.full((1, npg), PAGE_DROP, np.int32)
+        gids_m[0, :n_valid] = req.gids[p0: p0 + n_valid]
+        slots = pools.assign_slots(req.gids[p0: p0 + n_valid])
+        slots_m = np.full((1, npg), PAGE_DROP, np.int32)
+        slots_m[0, :n_valid] = slots
+        leaves = self._prefill_leaves(cache_chunk,
+                                      mdl.state_slot_meta(self.cfg), 0)
+        pools.set_kv(write_pages_batched(
+            pools.kv_view(), leaves, jnp.asarray(gids_m),
+            jnp.asarray(slots_m)))
+
+    def _admit_activate(self) -> List[Tuple[int, int]]:
+        """Boundary half of pipelined admission: install every ready
+        pending request's row WITHOUT forcing its first token.  The
+        sample is pure jnp chained behind the request's prefill, so
+        setting it into ``self.tok`` keeps the whole admission lazy and
+        the row joins the macro launched later this same step; the
+        int() download / tokens append / emit wait for the next
+        boundary (``_macro_complete`` resolves ``req._first_tok``), and
+        the device scan's init-time stop check covers a first token
+        that already hits EOS or the budget.  MUST run after the
+        boundary restored ``tok``/``pos`` from the macro's downloaded
+        state, or the whole-array assignment would clobber fresh rows."""
+        ready = [p for p in self._pending_admits if p.ready]
+        if not ready:
+            return []
+        self._pending_admits = [p for p in self._pending_admits
+                                if not p.ready]
+        t0 = time.monotonic()
+        emitted: List[Tuple[int, int]] = []
+        for p in ready:
+            req = p.req
+            req._key = (req.key if req.key is not None
+                        else jax.random.PRNGKey(0))
+            tok = E._sample(p.logits[:, 0], req._key, req.temperature)
+            self.tok = self.tok.at[req.row].set(tok)
+            self.pos = self.pos.at[req.row].set(self.prefix + p.plen)
+            self.active[req.row] = req
+            self._rows_epoch += 1
+            p.logits = None
+            if req.max_new_tokens <= 1:
+                # the row would only freeze at the scan's init check;
+                # cheaper to force the (long-dispatched) sample here and
+                # retire without ever joining a macro -- exactly the
+                # synchronous admission path for a one-token request
+                req.tokens.append(int(tok[0]))
+                emitted.append((req.rid, req.tokens[-1]))
+                self._retire(req)
+            else:
+                req._first_tok = tok
+        if (r := _obs.RECORDER).enabled:
+            now = time.monotonic()
+            r.emit("serve.admit", step=self.step_idx, joiners=len(ready),
+                   pages=int(sum(p.req.n_alloc for p in ready)),
+                   queue_depth=len(self.queue),
+                   wall_ms=(now - t0) * 1e3,
+                   # the batch's WORST reservation-to-activation stall:
+                   # the admission-latency price of deferring the sample
+                   # sync to a boundary (what admit_chunk_tokens trades
+                   # boundary stall against)
+                   stall_ms=(now - min(p.t_submit for p in ready)) * 1e3)
+            r.count("serve.admitted", len(ready))
+            r.gauge("serve.queue_depth", len(self.queue))
+        return emitted
+
+    @property
+    def idle(self) -> bool:
+        """No work left: nothing queued, in flight, pending admission or
+        active.  Drive loops (run(), benchmarks, tests) step until this
+        holds -- the pipelined loop keeps tail state (an in-flight macro,
+        reserved-but-not-activated admissions) past the last queue/active
+        emptiness, so checking those two alone would under-drain it."""
+        return not (self.queue or self.active or self._pending_admits
+                    or self._inflight is not None)
 
     def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:
         """Drive until every submitted request completed (or the step
-        budget runs out).  Returns rid -> emitted tokens."""
+        budget runs out).  Returns rid -> emitted tokens.  The pipelined
+        loop additionally drains its in-flight macro and any pending
+        (reserved-but-not-activated) admissions: every step ends with the
+        decision worker idle, so post-run manager/tuner state is as
+        deterministic as the synchronous loop's."""
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while not self.idle and steps < max_steps:
             self.step()
             steps += 1
         return {r.rid: list(r.tokens) for r in self.completed}
+
+    def close(self) -> None:
+        """Tear down the pipelined loop's background decision worker
+        (no-op for the synchronous loop).  Call after the last step;
+        tests and benchmarks use it to avoid thread buildup."""
+        if self._decision_worker is not None:
+            self._decision_worker.close()
+            self._decision_worker = None
 
     def _retire(self, req: Request) -> None:
         req.done = True
@@ -1021,6 +1583,7 @@ class ContinuousBatcher:
         if self.paged:
             self._hbm_need -= req.n_pages
             self._gid_tables[req.row, :] = -1
+            self._rows_epoch += 1
         if self.monitor is not None:
             self.monitor.release(req.gids)
         if (r := _obs.RECORDER).enabled:
