@@ -143,6 +143,25 @@ def smoke() -> None:
         "paged MLA admission must provision >= 1.5x fewer pages than " \
         f"dense rows (got {m['page_reduction_x']:.2f}x)"
 
+    # overload: graceful degradation (TTL shedding, bounded queue,
+    # pressure preemption) must RAISE in-deadline goodput over the
+    # FIFO-forever baseline, never trading token fidelity (results land
+    # in BENCH_overload.json for cross-PR tracking)
+    with Timer() as t:
+        ovl = traffic.overload(quick=True)
+    dg = ovl["modes"]["degraded"]
+    print(f"smoke_overload,{t.us:.0f},"
+          f"goodput_ratio={ovl['goodput_ratio_degraded_vs_baseline']:.2f}x;"
+          f"shed_rate={dg['shed_rate']:.2f};"
+          f"preemptions={dg['preemptions']};"
+          f"parity={ovl['degraded_completed_token_parity']}")
+    assert ovl["degraded_completed_token_parity"], \
+        "graceful degradation must never trade token fidelity"
+    assert ovl["goodput_ratio_degraded_vs_baseline"] >= 1.2, \
+        "degradation must raise in-deadline goodput >= 1.2x over the " \
+        "FIFO-forever baseline under overload " \
+        f"(got {ovl['goodput_ratio_degraded_vs_baseline']:.2f}x)"
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
@@ -229,6 +248,13 @@ def main(argv=None) -> None:
           f"macro_speedup={sp['speedup_macro_vs_per_token']:.2f}x;"
           f"macro_tok_s={sp['modes']['macro']['tokens_per_sec']:.0f};"
           f"parity={sp['token_identical_all_modes']}")
+
+    with Timer() as t:
+        ovl = traffic.overload(quick=q)
+    print(f"serving_overload,{t.us:.0f},"
+          f"goodput_ratio={ovl['goodput_ratio_degraded_vs_baseline']:.2f}x;"
+          f"shed_rate={ovl['modes']['degraded']['shed_rate']:.2f};"
+          f"parity={ovl['degraded_completed_token_parity']}")
 
     from benchmarks import roofline
     with Timer() as t:

@@ -561,6 +561,30 @@ class OnlineTuner:
         self.converged_at = self.step
         self._arm_window()
 
+    def revert_last_good(self, reason: str = "external-fault") -> None:
+        """Externally-triggered safety revert: a component outside the
+        tuner (e.g. the serving loop's DecisionWorker watchdog) detected a
+        fault whose cost telemetry may be garbage, so whatever sweep or
+        HOLD window is in flight cannot be trusted.  Drop back to the
+        last-good period and re-attest from a fresh HOLD window -- the
+        same non-adopting tail as a guard abort, but without charging a
+        guard trip (the tuner did nothing wrong) and without ranking the
+        half-measured sweep."""
+        if (r := _obs.RECORDER).enabled:
+            r.emit("tuner.transition", tuner=self.obs_id, step=self.step,
+                   frm=self.state, to=self.HOLD, reason="external-revert",
+                   period=int(self.last_good_period), detail=reason)
+        self._set_period(self.last_good_period)
+        self.state = self.HOLD
+        self.baseline_cost = None
+        self._drift_strikes = 0
+        self._improve_strikes = 0
+        self._guard_strikes = 0
+        self._hold_skip = 1 + self.actuation_lag
+        self._resweep_pending = True
+        self.converged_at = self.step
+        self._arm_window()
+
     def _should_extend(self) -> bool:
         """Variance-scaled trial windows: extend when the window's
         per-period cost buckets are heavy-tailed (coefficient of variation

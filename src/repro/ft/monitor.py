@@ -7,6 +7,11 @@
 ``Heartbeat``   -- background thread touching a file every ``interval``;
                    the supervisor treats a stale heartbeat as a hang (the
                    failure mode checkpoint-restart alone cannot catch).
+``Pulse``       -- Heartbeat's in-memory, in-process twin: a worker
+                   *thread* touches it around units of work and a watcher
+                   thread reads ``age()``; same staleness contract, no
+                   filesystem (the DecisionWorker watchdog uses it to
+                   tell hung from slow).
 ``FailureInjector`` -- deterministic fault injection (env
                    ``REPRO_FAIL_AT_STEP``) used by the restart tests.
 """
@@ -20,7 +25,7 @@ from typing import Callable, List, Optional
 
 from repro.obs import telemetry as _obs
 
-__all__ = ["StepTimer", "Heartbeat", "FailureInjector"]
+__all__ = ["StepTimer", "Heartbeat", "Pulse", "FailureInjector"]
 
 
 class StepTimer:
@@ -99,6 +104,28 @@ class Heartbeat:
             return time.time() - float(pathlib.Path(path).read_text())
         except (OSError, ValueError):
             return float("inf")
+
+
+class Pulse:
+    """In-memory heartbeat between two threads of one process.
+
+    The worked thread calls ``touch()`` around each unit of work (the
+    DecisionWorker touches before and after every ``fn`` call); a watcher
+    reads ``age()`` -- seconds since the last touch, ``inf`` before the
+    first.  Same staleness contract as :meth:`Heartbeat.age`, minus the
+    filesystem: a watcher with a timeout distinguishes *hung* (age keeps
+    growing past the deadline) from *slow but alive*.  Writes and reads
+    of a float are atomic under the GIL, so there is no lock."""
+
+    def __init__(self):
+        self._last: Optional[float] = None
+
+    def touch(self) -> None:
+        self._last = time.monotonic()
+
+    def age(self) -> float:
+        last = self._last
+        return float("inf") if last is None else time.monotonic() - last
 
 
 class FailureInjector:

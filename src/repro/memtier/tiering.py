@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -51,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cori, reuse
+from repro.ft.inject import MigrationError, NULL_PLAN
 from repro.kernels import ops
 from repro.obs import telemetry as _obs
 
@@ -215,6 +217,24 @@ class SharedPagedPools:
         self.slot_of = np.full((n_logical,), -1, np.int32)
         self.page_of_slot = np.full((hbm_pages,), -1, np.int32)
         self.owner_of = np.full((n_logical,), -1, np.int64)
+        #: fault-injection plan (chaos harness); inert by default
+        self.fault_plan = NULL_PLAN
+        #: live capacity in pages -- ``hbm_pages`` normally, lower under an
+        #: injected ``pool.squeeze`` (the batcher's pressure logic and the
+        #: tiering boundary both budget against this, never above it)
+        self.effective_hbm = int(hbm_pages)
+        #: migrate retry-with-backoff knobs (the degraded ladder's rung 1)
+        self.migrate_retries = 2
+        self.retry_backoff_s = 0.001
+        #: pages whose fast migration path exhausted its retries serve
+        #: pinned-to-host for a cooldown: ``apply_plan`` skips promoting
+        #: them and every demand fetch takes the degraded slow path,
+        #: priced at ``miss_penalty`` (see ``_pin_until``)
+        self._pin_until = np.zeros((n_logical,), np.int64)
+        self.pin_cooldown = 64
+        #: degraded (retry-exhausted) fetches since the caller last drained
+        #: this -- the batcher charges them into the tuner's window
+        self.degraded_fetches = 0
         #: bumped on every ``slot_of`` mutation -- page-table caches key
         #: on it to skip the per-boundary rebuild + device upload when no
         #: page moved (see ContinuousBatcher's table cache)
@@ -332,6 +352,15 @@ class SharedPagedPools:
     def free_slots(self) -> np.ndarray:
         return np.nonzero(self.page_of_slot < 0)[0].astype(np.int32)
 
+    @property
+    def hbm_occupied(self) -> int:
+        return int((self.page_of_slot >= 0).sum())
+
+    def host_pinned(self, gids: np.ndarray) -> np.ndarray:
+        """bool per gid: pinned to host by a retry-exhausted migration
+        (cooldown measured in placement ticks)."""
+        return self._pin_until[np.asarray(gids, np.int64)] > self._tick
+
     def table(self, gids: np.ndarray) -> np.ndarray:
         """Physical HBM slot per global page ID (-1 = host-only)."""
         return self.slot_of[np.asarray(gids, np.int64)]
@@ -372,6 +401,27 @@ class SharedPagedPools:
             r.gauge("pool.hbm_resident_frac",
                     float((self.page_of_slot >= 0).sum()) / self.hbm_pages)
 
+    def demote(self, gids: np.ndarray) -> int:
+        """Release the HBM slots of ``gids`` WITHOUT freeing the
+        allocation: the preemption primitive.  The host copy is
+        write-through (every decode step updates both tiers), so dropping
+        the slots moves no data and loses no bytes -- a frozen request's
+        cache survives intact and the next ``ensure_resident`` fetches it
+        back, which is exactly the Cori-visible data movement preemption
+        is supposed to be.  Returns the number of slots released."""
+        gids = np.asarray(gids, np.int64)
+        slots = self.slot_of[gids]
+        held = slots[slots >= 0]
+        self.page_of_slot[held] = -1
+        self.slot_of[gids] = -1
+        if held.size:
+            self.slot_epoch += 1
+            if (r := _obs.RECORDER).enabled:
+                r.gauge("pool.hbm_resident_frac",
+                        float((self.page_of_slot >= 0).sum())
+                        / self.hbm_pages)
+        return int(held.size)
+
     # -- physical data path --------------------------------------------------
     def write_page(self, gid: int, k_page, v_page) -> None:
         """Write one logical page's KV data (host copy; mirrored to the HBM
@@ -394,14 +444,26 @@ class SharedPagedPools:
         self._tick += 1
         self._slot_tick[np.asarray(slots, np.int64)] = self._tick
 
-    def migrate_slots(self, slots, logicals) -> None:
+    def migrate_slots(self, slots, logicals, *, degraded: bool = False)\
+            -> None:
         """Copy host pages ``logicals`` into HBM ``slots`` on EVERY
         physical pool: the legacy monitor-layer pair and, in fully-paged
         mode, each attention layer's leaf (one page's bytes move for all
         layers together -- the page is the migration unit, not the
-        (page, layer) pair)."""
+        (page, layer) pair).
+
+        ``degraded=True`` is the retry-exhausted slow path: it models a
+        synchronous per-page copy that cannot fail, so the injected
+        transport faults are bypassed (the bytes moved are identical --
+        only the modeled price differs, charged by the caller)."""
         if len(slots) == 0:
             return
+        if not degraded and (plan := self.fault_plan).enabled:
+            if (p := plan.fires("pool.migrate_slow")) is not None:
+                time.sleep(float(p.value))
+            if plan.fires("pool.migrate_fail") is not None:
+                raise MigrationError(
+                    f"injected migrate_slots failure ({len(slots)} pages)")
         sl, lg = jnp.asarray(slots), jnp.asarray(logicals)
         if self.k_host is not None:
             self.k_hbm = _migrate(self.k_hbm, self.k_host, sl, lg)
@@ -436,14 +498,22 @@ class SharedPagedPools:
         slots: List[int] = []
         for gid in missing.tolist():
             free = np.nonzero(self.page_of_slot < 0)[0]
-            if free.size:
+            occupied = self.hbm_pages - free.size
+            if free.size and occupied < self.effective_hbm:
                 slot = int(free[0])
             else:
+                # at (squeezed) capacity: evict the least-recently-ensured
+                # occupied slot outside the protected set; when every
+                # occupied slot is protected (a squeeze below the working
+                # set), overflow into a free slot rather than fail
                 prot = np.zeros(self.hbm_pages, bool)
                 prot[self.slot_of[gids[self.slot_of[gids] >= 0]]] = True
-                victims = np.nonzero(~prot)[0]
-                slot = int(victims[np.argmin(self._slot_tick[victims])])
-                self.slot_of[self.page_of_slot[slot]] = -1
+                victims = np.nonzero(~prot & (self.page_of_slot >= 0))[0]
+                if victims.size:
+                    slot = int(victims[np.argmin(self._slot_tick[victims])])
+                    self.slot_of[self.page_of_slot[slot]] = -1
+                else:
+                    slot = int(free[0])
             self.slot_of[gid] = slot
             self.page_of_slot[slot] = gid
             slots.append(slot)
@@ -456,14 +526,41 @@ class SharedPagedPools:
         """Demand-fetch: make every page in `gids` HBM-resident (free slots
         first, then evict the least-recently-ensured resident outside
         `gids`).  Returns the number of pages fetched -- the caller charges
-        them as misses.  Raises if `gids` alone exceed the slot pool."""
+        them as misses.  Raises if `gids` alone exceed the slot pool.
+
+        A failing ``migrate_slots`` (injected transport fault) is retried
+        with exponential backoff; on exhaustion the fetch falls back to
+        the degraded slow path -- the bytes still move (token parity is
+        never traded away), but the pages pin to host for a cooldown and
+        the fetch is counted in ``degraded_fetches`` so the serving loop
+        can charge it at ``miss_penalty`` into the tuner's window."""
         slots, missing = self._place(gids)
-        self.migrate_slots(slots, missing)
+        if missing.size:
+            self._migrate_with_retry(slots, missing)
         if missing.size and (r := _obs.RECORDER).enabled:
             r.count("pool.fetch_misses", int(missing.size))
             r.gauge("pool.hbm_resident_frac",
                     float((self.page_of_slot >= 0).sum()) / self.hbm_pages)
         return int(missing.size)
+
+    def _migrate_with_retry(self, slots, logicals) -> None:
+        """``migrate_slots`` with bounded retry-with-backoff, then the
+        degraded pinned-to-host fallback (see ``ensure_resident``)."""
+        delay = self.retry_backoff_s
+        for attempt in range(self.migrate_retries + 1):
+            try:
+                self.migrate_slots(slots, logicals)
+                return
+            except MigrationError:
+                if attempt < self.migrate_retries and delay > 0:
+                    time.sleep(delay)
+                    delay *= 2
+        self.migrate_slots(slots, logicals, degraded=True)
+        lg = np.asarray(logicals, np.int64)
+        self._pin_until[lg] = self._tick + self.pin_cooldown
+        self.degraded_fetches += int(lg.size)
+        if (r := _obs.RECORDER).enabled:
+            r.count("pool.degraded_fetches", int(lg.size))
 
     def assign_slots(self, gids: np.ndarray) -> np.ndarray:
         """``ensure_resident`` without the host->HBM byte copy: the caller
@@ -715,22 +812,49 @@ class TieringManager:
         evict = np.asarray(evict, np.int64)
         bring = bring[~resident[bring]]
         evict = evict[resident[evict]]
+        if hasattr(pools, "host_pinned"):
+            # retry-exhausted pages sit out the promotion plan until their
+            # cooldown lapses (they still demand-fetch via the degraded
+            # path when the kernel needs them)
+            bring = bring[~pools.host_pinned(bring)]
         free_slots = np.nonzero(pools.page_of_slot < 0)[0]
-        n_bring = min(len(bring), len(free_slots) + len(evict))
-        n_evict = max(0, n_bring - len(free_slots))
+        n_free = len(free_slots)
+        if hasattr(pools, "effective_hbm"):
+            # a capacity squeeze shrinks usable spare slots; swaps against
+            # evictions stay allowed (occupancy does not grow)
+            occupied = pools.page_of_slot.size - n_free
+            n_free = min(n_free, max(0, pools.effective_hbm - occupied))
+        n_bring = min(len(bring), n_free + len(evict))
+        n_evict = max(0, n_bring - n_free)
         bring, evict = bring[:n_bring], evict[:n_evict]
         n_mig = len(bring)
         if not n_mig:
             return
+        evict_slots = pools.slot_of[evict].copy()
         slots = np.concatenate([
             free_slots[: n_mig - len(evict)],
-            pools.slot_of[evict]]).astype(pools.slot_of.dtype)
+            evict_slots]).astype(pools.slot_of.dtype)
         pools.slot_of[evict] = -1
         pools.slot_of[bring] = slots
         pools.page_of_slot[slots] = bring
         pools.slot_epoch = getattr(pools, "slot_epoch", 0) + 1
         pools.touch_slots(slots)   # shared pools track slot recency
-        pools.migrate_slots(slots, bring)
+        try:
+            pools.migrate_slots(slots, bring)
+        except MigrationError as e:
+            # roll the slot bookkeeping back: the promoted pages stay
+            # host-resident (a later demand fetch will retry them through
+            # the backoff path) and the evicted residents keep their slots
+            pools.slot_of[bring] = -1
+            pools.page_of_slot[slots] = -1
+            pools.slot_of[evict] = evict_slots
+            pools.page_of_slot[evict_slots] = evict
+            pools.slot_epoch += 1
+            if (r := _obs.RECORDER).enabled:
+                r.emit("tier.move_failed", manager=self.obs_id,
+                       step=self.step, pages=int(n_mig), attempts=1,
+                       detail=str(e))
+                r.count("tier.moves_failed")
 
     def maybe_tier(self, pools: PagedPools,
                    active: Optional[np.ndarray] = None,
@@ -738,8 +862,11 @@ class TieringManager:
         """``force=True`` tiers regardless of the step cadence -- the
         macro-step serving loop wakes the host exactly once per movement
         period, so every wakeup IS a tiering boundary."""
-        plan = self.plan_tier(pools.slot_of >= 0,
-                              int((pools.page_of_slot < 0).sum()), active,
+        n_free = int((pools.page_of_slot < 0).sum())
+        if hasattr(pools, "effective_hbm"):
+            occupied = pools.page_of_slot.size - n_free
+            n_free = min(n_free, max(0, pools.effective_hbm - occupied))
+        plan = self.plan_tier(pools.slot_of >= 0, n_free, active,
                               planes=int(getattr(pools, "move_planes", 2)),
                               force=force)
         if plan is not None:

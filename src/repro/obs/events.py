@@ -84,6 +84,12 @@ _ALL = [
         "total pages of data moved (promotions x the geometry's leaf "
         "planes: k+v, ckv+krope, state) and the modeled "
         "migration+wakeup cost"),
+    _ev("tier.move_failed",
+        ("manager", "step", "pages", "attempts", "detail"),
+        "a planned promotion's migrate_slots failed after bounded "
+        "retries: the slot bookkeeping is rolled back, the pages stay "
+        "host-resident (demand-fetched later) and the failure is priced "
+        "into the tuner's window"),
     # -- pool: the shared slot pool (step domain) ----------------------------
     _ev("pool.attach",
         ("layers", "leaves", "planes"),
@@ -98,8 +104,27 @@ _ALL = [
         "loop adds stall_ms, the batch's worst reservation-to-activation "
         "admission stall (the SLO the chunk knob trades against)"),
     _ev("serve.retire",
-        ("step", "rid", "tokens"),
-        "a request left the system (EOS or length); its pages recycle"),
+        ("step", "rid", "tokens", "status", "deadline_ms"),
+        "a request left the system with a typed terminal status -- "
+        "completed (EOS or length), shed (bounded-queue overflow) or "
+        "expired (deadline passed while queued) -- plus wall "
+        "milliseconds from submit to retirement; its pages recycle"),
+    _ev("serve.preempt",
+        ("step", "rid", "pages", "mass", "hbm_need", "hbm_cap"),
+        "pool pressure froze the coldest active request (by Cori page "
+        "mass): its resident pages demoted to host, HBM slots released, "
+        "caches kept intact for later reactivation without recompute"),
+    _ev("serve.shed",
+        ("step", "rid", "reason", "queue_depth"),
+        "admission control refused a request: queue-full at submit or "
+        "deadline expiry while waiting; the request retires with a "
+        "typed non-completed status instead of stalling the batch"),
+    _ev("serve.worker_restart",
+        ("step", "reason", "restarts", "degraded"),
+        "the DecisionWorker watchdog fired (hang or crash): the boundary "
+        "fell back to a synchronous decision, the tuner reverted to "
+        "last-good, and the worker was relaunched (degraded=True once "
+        "restarts are exhausted and the loop stays synchronous)"),
     _ev("serve.macro",
         ("step", "n_steps", "tokens", "active", "fetched", "wall_ms",
          "straggler"),
@@ -130,6 +155,12 @@ _ALL = [
         ("timer", "step", "dt_s", "ema_s"),
         "StepTimer flagged a step slower than threshold x EMA (serving "
         "macro launches and the training step share this event)"),
+    _ev("ft.inject",
+        ("kind", "clock", "count", "value"),
+        "a FaultPlan injection point fired: the fault kind, the plan's "
+        "logical clock, this kind's occurrence counter and the point's "
+        "magnitude parameter (chaos runs replay deterministically from "
+        "the plan seed)"),
     # -- meta: records written by the exporters, never emit()ed --------------
     _ev("metrics.summary",
         ("schema", "counters", "gauges", "hists"),

@@ -25,6 +25,14 @@ launch time; it blocks only behind an already-launched scan.
 The worker is deliberately generic (it runs any ``fn(payload)``), so the
 hand-off protocol is testable without a model (tests/test_pipeline.py
 hammers it from a fake dispatch thread).
+
+Watchdog support: each worker maintains a :class:`Pulse` (an in-memory
+heartbeat it touches around every ``fn`` call), so a supervisor blocking
+in ``wait(generation, timeout=...)`` can tell a *hung* worker (pulse
+stale -- ``fn`` never returned) from a merely *slow* one, and
+``abandon()`` lets it walk away from a wedged thread without the 30s
+``close`` join: the thread is daemonic and its inbox is poisoned, so a
+zombie that eventually wakes finds nothing to do and exits.
 """
 from __future__ import annotations
 
@@ -32,6 +40,8 @@ import queue
 import threading
 import time
 from typing import Any, Callable, Optional, Tuple
+
+from repro.ft.monitor import Pulse
 
 __all__ = ["DecisionWorker"]
 
@@ -56,6 +66,10 @@ class DecisionWorker:
         self._cv = threading.Condition()
         self._next_gen = 0
         self._closed = False
+        #: in-memory heartbeat: touched around every ``fn`` call, so a
+        #: watchdog can tell a hung worker (stale pulse) from a slow one
+        self.pulse = Pulse()
+        self.pulse.touch()
         self._thread = threading.Thread(target=self._loop, name=name,
                                         daemon=True)
         self._thread.start()
@@ -87,13 +101,30 @@ class DecisionWorker:
                 raise self._errors.pop(generation)
             return self._results.pop(generation), time.monotonic() - t0
 
-    def close(self) -> None:
+    def close(self, timeout: float = 30.0) -> None:
         """Stop the worker: no further submits; pending work is drained."""
         if self._closed:
             return
         self._closed = True
         self._inbox.put(None)
-        self._thread.join(timeout=30.0)
+        self._thread.join(timeout=timeout)
+
+    def abandon(self) -> None:
+        """Walk away from a wedged worker WITHOUT joining it: mark the
+        worker closed and poison its inbox so the (daemonic) thread exits
+        whenever it wakes up.  The watchdog uses this after a ``wait``
+        timeout -- a hung ``fn`` would make ``close()``'s join block for
+        its full timeout -- then builds a fresh worker.  Results the
+        zombie eventually publishes land in its own orphaned dicts and
+        are never observed."""
+        if self._closed:
+            return
+        self._closed = True
+        self._inbox.put(None)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive() and not self._closed
 
     # -- worker thread -------------------------------------------------------
     def _loop(self) -> None:
@@ -102,10 +133,12 @@ class DecisionWorker:
             if item is None:
                 return
             gen, payload = item
+            self.pulse.touch()
             try:
                 result, err = self._fn(payload), None
             except BaseException as e:          # published, not swallowed
                 result, err = None, e
+            self.pulse.touch()
             with self._cv:
                 if err is None:
                     self._results[gen] = result

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core import cori
 from repro.core.traffic import RequestSpec
+from repro.ft.inject import NULL_PLAN
 from repro.ft.monitor import StepTimer
 from repro.kernels import ops
 from repro.memtier import workload as W
@@ -110,7 +111,8 @@ class TrafficMonitor:
     def on_step(self, global_mass: np.ndarray,
                 n_active: Optional[float] = None, *,
                 n_tokens: Optional[int] = None,
-                force_tier: bool = False, fetched: int = 0) -> int:
+                force_tier: bool = False, fetched: int = 0,
+                degraded: int = 0) -> int:
         """Feed one scheduler step's merged masses: accounting, periodic
         tiering over the shared pool, and the closed tuning loop.  Returns
         the tiering period now in force.
@@ -152,6 +154,13 @@ class TrafficMonitor:
         if fetched:
             mgr.misses += fetched
             mgr.modeled_time += fetched * mgr.cfg.fetch_cost
+        if degraded:
+            # retry-exhausted fetches lost the batched-transfer discount:
+            # top their price up from fetch_cost to the synchronous
+            # miss_penalty, INSIDE the tuner's window, so Cori re-plans
+            # around the failing pages instead of seeing them as cheap
+            mgr.modeled_time += degraded * max(
+                0.0, mgr.cfg.miss_penalty - mgr.cfg.fetch_cost)
         mgr.on_step(global_mass, self.pools.resident_mask,
                     weight=float(n_tokens or 1))
         mgr.maybe_tier(self.pools, active=self.pools.allocated_mask,
@@ -166,7 +175,8 @@ class TrafficMonitor:
 
     def on_macro_step(self, global_mass: np.ndarray,
                       n_active: Optional[float] = None,
-                      n_tokens: int = 1, fetched: int = 0) -> int:
+                      n_tokens: int = 1, fetched: int = 0,
+                      degraded: int = 0) -> int:
         """Feed one *macro step* (one movement period) of merged masses.
 
         The macro-step serving loop wakes the host exactly once per
@@ -181,11 +191,13 @@ class TrafficMonitor:
         normalisation, as on_step); ``fetched`` is the macro's up-front
         demand-fetch count, charged inside the tuner's cost window."""
         return self.on_step(global_mass, n_active, n_tokens=n_tokens,
-                            force_tier=True, fetched=fetched)
+                            force_tier=True, fetched=fetched,
+                            degraded=degraded)
 
     def plan_step(self, global_mass: np.ndarray,
                   n_active: Optional[float] = None, *,
                   n_tokens: int = 1, fetched: int = 0,
+                  degraded: int = 0,
                   resident: Optional[np.ndarray] = None,
                   n_free: int = 0,
                   active: Optional[np.ndarray] = None,
@@ -212,6 +224,9 @@ class TrafficMonitor:
         if fetched:
             mgr.misses += fetched
             mgr.modeled_time += fetched * mgr.cfg.fetch_cost
+        if degraded:
+            mgr.modeled_time += degraded * max(
+                0.0, mgr.cfg.miss_penalty - mgr.cfg.fetch_cost)
         mgr.on_step(global_mass, resident, weight=float(n_tokens or 1))
         plan = mgr.plan_tier(resident, n_free, active=active,
                              planes=planes, force=True)
@@ -254,7 +269,15 @@ class Request:
     eos_id: Optional[int] = None
     temperature: float = 0.0
     key: Optional[jax.Array] = None    # defaults to PRNGKey(0), as generate()
+    #: deadline in scheduler steps from submission; None = no deadline.
+    #: A request whose deadline passes while still QUEUED is shed
+    #: (status "expired"); once admitted it always runs to completion
+    #: (aborting mid-decode would break the token-parity contract)
+    ttl_steps: Optional[int] = None
     # -- runtime state (owned by the batcher) --
+    #: typed terminal status: "completed" | "shed" | "expired"
+    status: str = ""
+    deadline_step: int = -1            # absolute step the ttl resolves to
     row: int = -1
     gids: Optional[np.ndarray] = None  # pages the request OWNS (kv + state)
     n_pages: int = 0                   # exact page footprint
@@ -273,6 +296,12 @@ class Request:
     # the int() download, the tokens append, the emit -- is deferred to
     # the next macro boundary so activation never blocks the launch
     _first_tok: object = None
+    _t_submit: float = 0.0             # wall clock at submit (deadline_ms)
+    # preemption freeze-frame: the row state saved when the request is
+    # frozen (pages stay allocated host-side; _key/_i live on the
+    # request already, so reactivation is a pure row re-install)
+    _frozen_pos: int = 0
+    _frozen_tok: int = 0
 
     @property
     def total_len(self) -> int:
@@ -384,7 +413,11 @@ class ContinuousBatcher:
                  macro_steps: Optional[int] = None,
                  pipeline: bool = False,
                  admit_chunk_tokens: Optional[int] = None,
-                 cond=None, extra_embeds=None):
+                 cond=None, extra_embeds=None,
+                 fault_plan=None,
+                 max_queue: Optional[int] = None,
+                 watchdog_s: Optional[float] = None,
+                 max_worker_restarts: int = 3):
         self.params, self.cfg = params, cfg
         self.page_size = page_size
         self.max_len = -(-max_len // page_size) * page_size
@@ -477,6 +510,33 @@ class ContinuousBatcher:
         self.queue: "collections.deque[Request]" = collections.deque()
         self.step_idx = 0
         self.completed: List[Request] = []
+
+        # -- overload-safety machinery (docs/robustness.md) --
+        #: deterministic fault-injection plan; inert by default
+        self.fault_plan = fault_plan if fault_plan is not None else NULL_PLAN
+        if monitor is not None:
+            monitor.pools.fault_plan = self.fault_plan
+        #: bounded submit queue: a submit past this depth is shed
+        #: immediately (status "shed") instead of queueing unboundedly
+        self.max_queue = max_queue
+        #: DecisionWorker watchdog: how long a boundary may wait for the
+        #: background decision before declaring the worker hung, falling
+        #: back to a synchronous decision and restarting it.  None keeps
+        #: the untimed wait (the fault-free default)
+        self.watchdog_s = watchdog_s
+        self.max_worker_restarts = max_worker_restarts
+        self._worker_restarts = 0
+        self._worker_degraded = False   # restarts exhausted: stay sync
+        #: live-epoch guard: bumped on every worker restart so a zombie
+        #: worker thread that wakes after being abandoned sees a stale
+        #: epoch in its payload and never touches the manager/tuner
+        self._live_epoch = 0
+        self._last_payload: Optional[Dict] = None
+        #: preemption-frozen requests, FIFO (oldest reactivates first)
+        self._frozen: List[Request] = []
+        self.preemptions = 0
+        self.shed = 0                   # queue-full sheds
+        self.expired = 0                # deadline expiries while queued
 
         # epoch-keyed device table cache: (pools.slot_epoch, _rows_epoch)
         # unchanged => the staged upload is reused (a buffer swap), so a
@@ -584,6 +644,9 @@ class ContinuousBatcher:
         return kv_alloc + self._state_extra
 
     def submit(self, req: Request) -> None:
+        req._t_submit = time.monotonic()
+        req.deadline_step = (self.step_idx + req.ttl_steps
+                             if req.ttl_steps is not None else -1)
         if self.prefix + req.total_len > self.max_len:
             raise ValueError(f"request {req.rid} needs "
                              f"{self.prefix + req.total_len} positions, "
@@ -605,9 +668,58 @@ class ContinuousBatcher:
                     f"pages, the HBM slot pool holds "
                     f"{self.monitor.pools.hbm_pages}: it can never decode "
                     "fully paged")
+        if (self.max_queue is not None and len(self.queue) >= self.max_queue
+                and self.fault_plan.fires("admit.flood") is None):
+            # bounded queue: shed at submit time with a typed status
+            # instead of queueing unboundedly.  An armed ``admit.flood``
+            # fault bypasses the bound -- the chaos harness forces the
+            # queue past its depth to prove downstream stages still shed
+            # rather than stall.
+            self._retire_unadmitted(req, "shed", "queue-full")
+            return
         self.queue.append(req)
 
+    def _retire_unadmitted(self, req: Request, status: str,
+                           reason: str) -> None:
+        """Terminate a request that never reached a row: load-shed at
+        submit (``status="shed"``) or deadline-expired while queued
+        (``status="expired"``).  It lands in ``completed`` with an empty
+        token stream -- every submitted request terminates with a typed
+        status, the no-hang contract tests/test_faults.py pins."""
+        req.done = True
+        req.status = status
+        self.completed.append(req)
+        if status == "shed":
+            self.shed += 1
+        else:
+            self.expired += 1
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.shed", step=self.step_idx, rid=req.rid,
+                   reason=reason, queue_depth=len(self.queue))
+            r.emit("serve.retire", step=self.step_idx, rid=req.rid,
+                   tokens=0, status=status,
+                   deadline_ms=(time.monotonic() - req._t_submit) * 1e3
+                   if req._t_submit else 0.0)
+            r.count("serve.shed_total")
+            r.count("serve.retired")
+
+    def _expire_queue(self) -> None:
+        """Drop queued requests whose deadline has passed (admission-time
+        TTL): they can no longer finish useful work, so spending rows and
+        pages on them only delays in-deadline traffic.  Admitted requests
+        are never aborted (token-parity contract)."""
+        if not any(req.deadline_step >= 0 for req in self.queue):
+            return
+        keep: List[Request] = []
+        for req in self.queue:
+            if 0 <= req.deadline_step < self.step_idx:
+                self._retire_unadmitted(req, "expired", "deadline")
+            else:
+                keep.append(req)
+        self.queue = collections.deque(keep)
+
     def _admit(self) -> List[Tuple[int, int]]:
+        self._expire_queue()
         batch: List[Request] = []
         while self.queue and self.rows_free:
             req = self.queue[0]
@@ -615,8 +727,11 @@ class ContinuousBatcher:
             n_alloc = self._pages_alloc(req)
             gids = None
             if self.monitor is not None:
+                # the gate runs against the EFFECTIVE capacity (equal to
+                # hbm_pages unless a squeeze fault shrank it), so new
+                # admissions respect the degraded budget
                 if self.paged and (self._hbm_need + n_exact
-                                   > self.monitor.pools.hbm_pages):
+                                   > self.monitor.pools.effective_hbm):
                     break              # head-of-line: keep arrival order
                 gids = self.monitor.pools.alloc(n_alloc, req.rid)
                 if gids is None:       # head-of-line: keep arrival order
@@ -925,6 +1040,103 @@ class ContinuousBatcher:
             jnp.asarray(self._prefix_gids, jnp.int32)[None],
             jnp.asarray(slots, jnp.int32)[None]))
 
+    # -- overload safety: fault clock, preemption, reactivation --------------
+    def _fault_tick(self) -> None:
+        """Advance the fault plan's logical clock once per scheduler step
+        and actuate the capacity-squeeze fault: while a ``pool.squeeze``
+        point fires, the pool's *effective* HBM capacity shrinks to the
+        point's value, and every admission gate, tiering budget and the
+        preemption loop run against that budget.  When the window closes
+        the full capacity returns."""
+        plan = self.fault_plan
+        if not plan.enabled:
+            return
+        plan.tick()
+        if self.monitor is not None and self.paged:
+            pools = self.monitor.pools
+            p = plan.fires("pool.squeeze")
+            pools.effective_hbm = (max(1, int(p.value)) if p is not None
+                                   else pools.hbm_pages)
+
+    def _rebalance(self) -> None:
+        """Pressure response at a scheduler boundary (docs/robustness.md,
+        "Preemption semantics").  First reactivate frozen requests whose
+        footprint fits the effective capacity again -- FIFO, oldest
+        first, with a forced-progress escape: if nothing else is active
+        or pending, one frozen request thaws regardless, so a squeeze
+        below any single footprint still drains instead of deadlocking.
+        Then, while the in-flight footprint exceeds the effective
+        capacity, preempt the COLDEST victim -- the active request whose
+        pages carry the least manager hotness (Cori page mass), ties to
+        the newest rid -- until the remainder fits or one request is
+        left (the last row never preempts: forward progress)."""
+        if not self.paged or self.monitor is None:
+            return
+        pools = self.monitor.pools
+        while self._frozen and self.rows_free:
+            req = self._frozen[0]
+            fits = self._hbm_need + req.n_pages <= pools.effective_hbm
+            if not fits and (self.active or self._pending_admits):
+                break
+            self._thaw(self._frozen.pop(0))
+        while (self._hbm_need > pools.effective_hbm
+               and len(self.active) > 1):
+            hot = self.monitor.manager.hotness
+            victims = [req for req in self.active.values()
+                       if req._first_tok is None]
+            if len(victims) <= 1:
+                break
+            victim = min(victims,
+                         key=lambda q: (float(hot[q.gids].sum()), -q.rid))
+            self._preempt(victim)
+
+    def _preempt(self, req: Request) -> None:
+        """Freeze one active request: demote its own pages to host
+        (releasing their HBM slots -- the write-through invariant means
+        the host copies are already current, so this moves no data),
+        free its row, and park it on the frozen list with the row state
+        (position, last token) it needs to resume bit-identically.  Its
+        pages stay ALLOCATED -- the KV survives host-side -- so
+        reactivation is a row re-install plus demand fetches, never a
+        re-prefill."""
+        pools = self.monitor.pools
+        row = req.row
+        req._frozen_pos = int(np.asarray(self.pos)[row])
+        req._frozen_tok = int(np.asarray(self.tok)[row, 0])
+        hot = float(self.monitor.manager.hotness[req.gids].sum())
+        released = pools.demote(req.gids)
+        del self.active[row]
+        self.rows_free.append(row)
+        self._hbm_need -= req.n_pages
+        self._gid_tables[row, :] = -1
+        self._rows_epoch += 1
+        req.row = -1
+        self._frozen.append(req)
+        self.preemptions += 1
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.preempt", step=self.step_idx, rid=req.rid,
+                   pages=int(released), mass=hot,
+                   hbm_need=int(self._hbm_need),
+                   hbm_cap=int(pools.effective_hbm))
+            r.count("serve.preempted")
+
+    def _thaw(self, req: Request) -> None:
+        """Reactivate a frozen request into a free row.  ``_key``/``_i``
+        never left the request, the pages never left the pool, and the
+        saved (position, last token) re-install restores the row exactly
+        -- the resumed stream is bit-identical to an uninterrupted run.
+        The pages fetch back to HBM lazily through the next launch's
+        ``ensure_resident`` (the Cori-visible cost of the preemption)."""
+        row = self.rows_free.pop()
+        req.row = row
+        self._map_row(req)
+        self._hbm_need += req.n_pages
+        self.pos = self.pos.at[row].set(req._frozen_pos)
+        self.tok = self.tok.at[row].set(req._frozen_tok)
+        self.active[row] = req
+        if (r := _obs.RECORDER).enabled:
+            r.count("serve.thawed")
+
     # -- the per-step scheduler loop -----------------------------------------
     def step(self) -> List[Tuple[int, int]]:
         """One scheduler step: admit (one packed prefill), monitor+tier,
@@ -936,9 +1148,11 @@ class ContinuousBatcher:
         after their macro launched."""
         track = (r := _obs.RECORDER).enabled
         t0 = time.monotonic() if track else 0.0
+        self._fault_tick()
         if self.pipeline:
             emitted = self._step_pipelined()
         else:
+            self._rebalance()
             emitted = self._admit()
             self.step_idx += 1
             if self.active:
@@ -995,6 +1209,8 @@ class ContinuousBatcher:
         # reads, charged inside the monitor feed below (fetch_cost: the
         # pools batch the copies into one gathered transfer)
         fetched = pools.ensure_resident(self._need(pos_np, 1))
+        degraded = pools.degraded_fetches
+        pools.degraded_fetches = 0
 
         # page tables re-upload only when a page re-slotted or the row
         # mapping changed since the last step (epoch-keyed cache)
@@ -1013,7 +1229,7 @@ class ContinuousBatcher:
             [(r.table_gids, masses[r.row][r.mass_cols])
              for r in self.active.values()])
         self.monitor.on_step(merged, n_active=len(self.active),
-                             fetched=fetched)
+                             fetched=fetched, degraded=degraded)
 
         self.pos = self.pos + 1
         emitted: List[Tuple[int, int]] = []
@@ -1105,6 +1321,12 @@ class ContinuousBatcher:
         # period, wherever the copy was dispatched)
         fetched += self._prefetched_next
         self._prefetched_next = 0
+        # drain the pool's degraded-fetch counter (retry-exhausted,
+        # host-pinned fetches -- wherever they were dispatched, incl. the
+        # overlap prefetch) into this macro's cost bill: the monitor tops
+        # their price up from fetch_cost to miss_penalty
+        degraded = pools.degraded_fetches
+        pools.degraded_fetches = 0
 
         # page tables upload once per macro step (tiering only runs at
         # macro boundaries, so no page can re-slot mid-macro) -- and only
@@ -1137,8 +1359,8 @@ class ContinuousBatcher:
             cond=self._cond_rows, state_cols=self._state_cols)
         pools.set_kv(kv)
         return {"toks": toks, "st": st, "rows": rows, "n_steps": n_steps,
-                "fetched": fetched, "n_flags": n_flags,
-                "horizons": horizons, "pos_np": pos_np}
+                "fetched": fetched, "degraded": degraded,
+                "n_flags": n_flags, "horizons": horizons, "pos_np": pos_np}
 
     def _macro_complete(self, fl: Dict, sync: bool
                         ) -> Tuple[List[Tuple[int, int]], Optional[Dict]]:
@@ -1174,18 +1396,32 @@ class ContinuousBatcher:
              for _, r in rows])
         dt = max(1, int(alive_steps.max()))
         n_active = float(alive_steps.sum()) / dt
+        if (plan := self.fault_plan).enabled \
+                and plan.fires("mass.nonfinite") is not None:
+            # corrupt the merged telemetry deterministically: the monitor
+            # feed's NaN clamp must neutralise it before the reuse
+            # collector / tuner see it (the defense this fault exercises)
+            merged[::3] = np.nan
+            merged[1::5] = np.inf
         payload: Optional[Dict] = None
         if sync:
             self.monitor.on_macro_step(merged, n_active=n_active,
-                                       n_tokens=dt, fetched=fl["fetched"])
+                                       n_tokens=dt, fetched=fl["fetched"],
+                                       degraded=fl["degraded"])
         else:
             # boundary snapshots for the worker's plan (apply_plan
-            # revalidates against whatever moves before actuation)
+            # revalidates against whatever moves before actuation).  The
+            # free-slot budget is clamped to the squeezed capacity so a
+            # worker-planned bring never overfills the effective pool.
             pools = self.monitor.pools
+            n_free = int((pools.page_of_slot < 0).sum())
+            n_free = min(n_free, max(0, pools.effective_hbm
+                                     - pools.hbm_occupied))
             payload = dict(global_mass=merged, n_active=n_active,
                            n_tokens=dt, fetched=fl["fetched"],
+                           degraded=fl["degraded"],
                            resident=pools.slot_of >= 0,
-                           n_free=int((pools.page_of_slot < 0).sum()),
+                           n_free=n_free,
                            active=pools.allocated_mask,
                            planes=int(getattr(pools, "move_planes", 2)))
 
@@ -1224,8 +1460,59 @@ class ContinuousBatcher:
     def _plan_decision(self, payload: Dict):
         """Runs on the DecisionWorker thread.  Strict alternation (the
         dispatch thread only touches the manager/tuner between ``wait``
-        and the next ``submit``) makes this lock-free by construction."""
-        return self.monitor.plan_step(**payload)
+        and the next ``submit``) makes this lock-free by construction.
+
+        The worker faults (injected delay / crash) fire BEFORE the
+        manager/tuner are touched, so a watchdog recovery can recompute
+        the boundary synchronously without double-feeding the tuner; the
+        live-epoch guard then makes a zombie that wakes *after* a
+        recovery publish an inert result instead of racing the dispatch
+        thread on shared state."""
+        plan = self.fault_plan
+        if plan.enabled:
+            if (p := plan.fires("worker.delay")) is not None:
+                time.sleep(p.value)
+            if plan.fires("worker.crash") is not None:
+                raise RuntimeError("injected decision-worker crash")
+        if payload.get("_epoch", self._live_epoch) != self._live_epoch:
+            return self.monitor.manager.period, None
+        kw = {k: v for k, v in payload.items() if k != "_epoch"}
+        return self.monitor.plan_step(**kw)
+
+    def _worker_recover(self, reason: str):
+        """Watchdog recovery: the DecisionWorker hung past the deadline
+        or its decision raised.  Walk away from the thread (``abandon``
+        for a hang -- joining a wedged thread would stall the loop; a
+        clean ``close`` for a crash), bump the live epoch so the zombie
+        can never touch shared state, revert the tuner to its last-good
+        period (the in-flight sweep's state is unreliable), recompute
+        THIS boundary's decision synchronously from the stashed payload,
+        and spawn a fresh worker -- unless ``max_worker_restarts`` is
+        exhausted, after which the loop stays permanently synchronous
+        (degraded mode: correct, just without overlap).  Returns the
+        recomputed ``(period, plan)``."""
+        self._live_epoch += 1
+        w = self._decision_worker
+        if reason == "hang":
+            w.abandon()
+        else:
+            w.close(timeout=1.0)
+        self._worker_restarts += 1
+        self._worker_degraded = self._worker_restarts \
+            > self.max_worker_restarts
+        self._decision_worker = (None if self._worker_degraded
+                                 else DecisionWorker(self._plan_decision))
+        if self.monitor.tuner is not None:
+            self.monitor.tuner.revert_last_good(
+                reason=f"decision-worker-{reason}")
+        kw = {k: v for k, v in self._last_payload.items() if k != "_epoch"}
+        period, plan = self.monitor.plan_step(**kw)
+        if (r := _obs.RECORDER).enabled:
+            r.emit("serve.worker_restart", step=self.step_idx,
+                   reason=reason, restarts=self._worker_restarts,
+                   degraded=self._worker_degraded)
+            r.count("serve.worker_restarts")
+        return period, plan
 
     def _step_pipelined(self) -> List[Tuple[int, int]]:
         """One pipelined scheduler step.  Deterministic fixed order:
@@ -1255,13 +1542,27 @@ class ContinuousBatcher:
         if fl is not None:
             emitted, payload = self._macro_complete(fl, sync=False)
         self.step_idx += 1
+        self._rebalance()
         self._admit_reserve()
         self._admit_prefill_fresh()
         emitted += self._admit_activate()
         if self.active:
             self._inflight = self._macro_launch()
         if payload is not None:
-            self._decision_gen = self._decision_worker.submit(payload)
+            if self._decision_worker is not None:
+                # the payload carries the live epoch (the zombie guard)
+                # and is stashed so a watchdog recovery can recompute
+                # this boundary synchronously
+                payload["_epoch"] = self._live_epoch
+                self._last_payload = payload
+                self._decision_gen = self._decision_worker.submit(payload)
+            else:
+                # degraded-permanent mode (restarts exhausted): the
+                # boundary decision runs synchronously -- no overlap,
+                # same computation
+                period, plan = self.monitor.plan_step(
+                    **{k: v for k, v in payload.items() if k != "_epoch"})
+                self.monitor.apply_decision(plan)
         self._pipeline_overlap()
         return emitted
 
@@ -1277,7 +1578,18 @@ class ContinuousBatcher:
         if self._decision_gen is not None:
             gen, self._decision_gen = self._decision_gen, None
             t0 = time.monotonic()
-            (period, plan), waited = self._decision_worker.wait(gen)
+            try:
+                (period, plan), waited = self._decision_worker.wait(
+                    gen, timeout=self.watchdog_s)
+            except TimeoutError:       # hung worker: watchdog recovery
+                period, plan = self._worker_recover("hang")
+                waited = time.monotonic() - t0
+            except Exception:          # crashed worker
+                if self.watchdog_s is None:
+                    raise              # no watchdog: fail loud (close()
+                                       # still tears down cleanly)
+                period, plan = self._worker_recover("crash")
+                waited = time.monotonic() - t0
             self.monitor.apply_decision(plan)
             if track:
                 r.emit("serve.pipeline.decision", step=self.step_idx,
@@ -1330,11 +1642,12 @@ class ContinuousBatcher:
         as ``_admit``), but the prefill runs inside overlap windows and
         the row only activates at a macro boundary."""
         pools = self.monitor.pools
+        self._expire_queue()
         while self.queue and self.rows_free:
             req = self.queue[0]
             n_exact = self._pages_exact(req)
             n_alloc = self._pages_alloc(req)
-            if self._hbm_need + n_exact > pools.hbm_pages:
+            if self._hbm_need + n_exact > pools.effective_hbm:
                 break              # head-of-line: keep arrival order
             gids = pools.alloc(n_alloc, req.rid)
             if gids is None:       # head-of-line: keep arrival order
@@ -1552,7 +1865,7 @@ class ContinuousBatcher:
         reserved-but-not-activated admissions) past the last queue/active
         emptiness, so checking those two alone would under-drain it."""
         return not (self.queue or self.active or self._pending_admits
-                    or self._inflight is not None)
+                    or self._frozen or self._inflight is not None)
 
     def run(self, max_steps: int = 10 ** 6) -> Dict[int, List[int]]:
         """Drive until every submitted request completed (or the step
@@ -1570,13 +1883,19 @@ class ContinuousBatcher:
     def close(self) -> None:
         """Tear down the pipelined loop's background decision worker
         (no-op for the synchronous loop).  Call after the last step;
-        tests and benchmarks use it to avoid thread buildup."""
+        tests and benchmarks use it to avoid thread buildup.  Safe
+        mid-macro and after a worker error: a pending decision
+        generation is dropped (never waited on again), and the worker's
+        drain-and-join runs even if its last ``fn`` raised -- the error
+        stays published in the dead worker, not re-raised here."""
+        self._decision_gen = None
         if self._decision_worker is not None:
             self._decision_worker.close()
             self._decision_worker = None
 
     def _retire(self, req: Request) -> None:
         req.done = True
+        req.status = "completed"
         del self.active[req.row]
         self.rows_free.append(req.row)
         self.completed.append(req)
@@ -1588,7 +1907,9 @@ class ContinuousBatcher:
             self.monitor.release(req.gids)
         if (r := _obs.RECORDER).enabled:
             r.emit("serve.retire", step=self.step_idx, rid=req.rid,
-                   tokens=len(req.tokens))
+                   tokens=len(req.tokens), status=req.status,
+                   deadline_ms=(time.monotonic() - req._t_submit) * 1e3
+                   if req._t_submit else 0.0)
             r.count("serve.retired")
 
     # -- shared-pool data path -----------------------------------------------
@@ -1705,7 +2026,8 @@ class TrafficScheduler:
     def __init__(self, specs: Sequence[RequestSpec], monitor: TrafficMonitor,
                  *, page_size: int = 16, max_active: int = 8,
                  kinds: Optional[Dict[str, Callable]] = None,
-                 bucket: bool = True, row_pages: Optional[int] = None):
+                 bucket: bool = True, row_pages: Optional[int] = None,
+                 ttl_steps: Optional[int] = None):
         self.pending = collections.deque(
             sorted(specs, key=lambda s: (s.arrival, s.rid)))
         self.monitor = monitor
@@ -1717,11 +2039,17 @@ class TrafficScheduler:
         self.bucket = bucket
         self.row_pages = row_pages if row_pages is not None else max(
             (s.n_pages(page_size) for s in specs), default=1)
+        #: admission TTL in steps past arrival: a request still queued
+        #: ``ttl_steps`` after it arrived is shed (status "expired")
+        #: instead of serving stale work under overload; None = FIFO
+        #: forever (the fault-free baseline)
+        self.ttl_steps = ttl_steps
         self.active: List[_SynthActive] = []
         self.now = 0
         self.admitted = 0
         self.completed = 0
         self.rejected = 0
+        self.shed = 0
 
     @property
     def peak_cache_pages(self) -> int:
@@ -1741,6 +2069,22 @@ class TrafficScheduler:
         return bucket_pages(n_exact, cap=max(self.row_pages, n_exact))
 
     def step(self) -> None:
+        if self.ttl_steps is not None:
+            # expiry order is arrival order (the deque is arrival-sorted
+            # and the TTL is uniform), so a head scan sheds exactly the
+            # expired prefix
+            while (self.pending
+                   and self.now > self.pending[0].arrival + self.ttl_steps):
+                spec = self.pending.popleft()
+                self.rejected += 1
+                self.shed += 1
+                if (r := _obs.RECORDER).enabled:
+                    r.emit("serve.shed", step=self.now, rid=spec.rid,
+                           reason="deadline", queue_depth=len(self.pending))
+                    r.emit("serve.retire", step=self.now, rid=spec.rid,
+                           tokens=0, status="expired", deadline_ms=0.0)
+                    r.count("serve.shed_total")
+                    r.count("serve.retired")
         joiners = pages = 0
         while (self.pending and self.pending[0].arrival <= self.now
                and len(self.active) < self.max_active):
@@ -1792,7 +2136,8 @@ class TrafficScheduler:
                 self.completed += 1
                 if (r := _obs.RECORDER).enabled:
                     r.emit("serve.retire", step=self.now, rid=a.spec.rid,
-                           tokens=int(a.pattern.shape[0]))
+                           tokens=int(a.pattern.shape[0]),
+                           status="completed", deadline_ms=0.0)
                     r.count("serve.retired")
             else:
                 still.append(a)

@@ -1,0 +1,363 @@
+"""Overload-safe serving: the chaos matrix and the degradation ladder.
+
+Covers the robustness tentpole end to end: FaultPlan determinism (a
+fault schedule is a pure function of (seed, kind, occurrence)), the
+pool-level degraded ladder (migrate retry-with-backoff, pinned-to-host
+fallback, apply_plan rollback), pressure-driven preemption with
+bit-identical reactivation, the DecisionWorker watchdog (hang + crash
+recovery, degraded-permanent sync mode), typed terminal statuses for
+every submitted request, and the headline acceptance bar: a seeded
+chaos run firing EVERY injection point drains without a hang and its
+completed token streams are bit-identical to the fault-free run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import OnlineTuner
+from repro.core.traffic import RequestSpec
+from repro.ft.inject import (FAULT_KINDS, FaultPlan, FaultPoint,
+                             MigrationError, NULL_PLAN)
+from repro.memtier import SharedPagedPools, TierConfig, TieringManager
+from repro.obs import telemetry as _obs
+from repro.serve.sched import TrafficMonitor, TrafficScheduler
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, windows, bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    def run(seed):
+        plan = FaultPlan([FaultPoint("pool.migrate_fail", prob=0.5)],
+                         seed=seed)
+        plan.tick()
+        return [plan.fires("pool.migrate_fail") is not None
+                for _ in range(64)]
+
+    a, b = run(3), run(3)
+    assert a == b, "same seed must replay the same fault schedule"
+    assert any(a) and not all(a), "prob=0.5 must mix hits and misses"
+    assert run(4) != a, "the schedule is seed-keyed"
+    plan = FaultPlan([FaultPoint("pool.migrate_fail", prob=0.5)], seed=3)
+    plan.tick()
+    hits = sum(plan.fires("pool.migrate_fail") is not None
+               for _ in range(64))
+    assert plan.fired["pool.migrate_fail"] == hits == sum(a)
+
+
+def test_fault_plan_windows_and_registry():
+    plan = FaultPlan([FaultPoint("pool.squeeze", start=2, stop=4, value=8)])
+    hits = []
+    for _ in range(6):
+        plan.tick()
+        hits.append(plan.fires("pool.squeeze") is not None)
+    assert hits == [False, True, True, False, False, False], \
+        "a point fires only inside its [start, stop) clock window"
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPoint("bogus.kind")
+    assert not NULL_PLAN.enabled
+    assert all(NULL_PLAN.fires(k) is None for k in FAULT_KINDS), \
+        "the shared inert plan never fires"
+    assert NULL_PLAN.fired == {}
+
+
+# ---------------------------------------------------------------------------
+# pool-level degraded ladder (no model)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_pools():
+    return SharedPagedPools.create(8, 4, page_size=2, kv_heads=1, head_dim=2)
+
+
+def test_migrate_retry_exhaustion_pins_to_host():
+    """An always-failing transport exhausts the retry budget, falls back
+    to the degraded synchronous copy (the bytes still move -- the pages
+    end up resident), pins the pages to host for a cooldown and counts
+    the fetch so the serving loop can re-price it."""
+    rec = _obs.install(_obs.Recorder(enabled=True))
+    try:
+        pools = _tiny_pools()
+        pools.migrate_retries = 1
+        pools.retry_backoff_s = 0.0
+        pools.fault_plan = FaultPlan([FaultPoint("pool.migrate_fail")])
+        gids = pools.alloc(2, owner=0)
+        fetched = pools.ensure_resident(gids)
+        assert fetched == 2
+        assert (pools.slot_of[gids] >= 0).all(), \
+            "the degraded path still makes the pages resident"
+        assert pools.degraded_fetches == 2
+        assert pools.host_pinned(gids).all(), \
+            "retry-exhausted pages pin to host for the cooldown"
+        assert pools.fault_plan.fired["pool.migrate_fail"] == 2, \
+            "initial attempt + 1 retry"
+        assert rec.summary()["counters"]["pool.degraded_fetches"] == 2
+    finally:
+        _obs.install(_obs.Recorder())
+
+
+def test_apply_plan_rolls_back_on_migration_failure():
+    """A failed promotion batch rolls the slot bookkeeping back (the
+    pages stay host-resident, prior residents keep their slots) and
+    emits ``tier.move_failed`` instead of corrupting the tables."""
+    rec = _obs.install(_obs.Recorder(enabled=True))
+    try:
+        pools = _tiny_pools()
+        pools.alloc(4, owner=0)
+        pools.ensure_resident(np.asarray([0, 1]))
+        before_slots = pools.slot_of.copy()
+        pools.fault_plan = FaultPlan([FaultPoint("pool.migrate_fail")])
+        mgr = TieringManager(8, TierConfig(page_size=2, hbm_pages=4,
+                                           period_steps=1))
+        mgr.apply_plan(pools, bring=np.asarray([2, 3]),
+                       evict=np.asarray([], np.int64))
+        np.testing.assert_array_equal(pools.slot_of, before_slots)
+        assert pools.hbm_occupied == 2
+        assert rec.summary()["counters"]["tier.moves_failed"] == 1
+        (ev,) = rec.events("tier.move_failed")
+        assert ev["pages"] == 2
+    finally:
+        _obs.install(_obs.Recorder())
+
+
+def test_apply_plan_skips_host_pinned_pages():
+    pools = _tiny_pools()
+    pools.migrate_retries = 0
+    pools.retry_backoff_s = 0.0
+    pools.alloc(4, owner=0)
+    pools.fault_plan = FaultPlan([FaultPoint("pool.migrate_fail")])
+    pools.ensure_resident(np.asarray([0]))          # pins page 0
+    pools.fault_plan = NULL_PLAN
+    assert pools.host_pinned(np.asarray([0, 1])).tolist() == [True, False]
+    pools.demote(np.asarray([0]))
+    mgr = TieringManager(8, TierConfig(page_size=2, hbm_pages=4,
+                                       period_steps=1))
+    mgr.apply_plan(pools, bring=np.asarray([0, 1]),
+                   evict=np.asarray([], np.int64))
+    assert pools.slot_of[0] < 0, "pinned pages sit out the promotion plan"
+    assert pools.slot_of[1] >= 0
+
+
+# ---------------------------------------------------------------------------
+# model-free admission TTL (TrafficScheduler)
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_scheduler_sheds_expired_queue():
+    pools = SharedPagedPools.create(64, 16)
+    mgr = TieringManager(64, TierConfig(page_size=16, hbm_pages=16,
+                                        period_steps=4))
+    specs = [RequestSpec(i, 0, 17, 30, "sink", i) for i in range(6)]
+    sched = TrafficScheduler(specs, TrafficMonitor(pools, mgr),
+                             page_size=16, max_active=2, ttl_steps=5)
+    sched.run(steps=400)
+    assert sched.shed > 0, "queued requests past their TTL must shed"
+    assert sched.completed + sched.shed == 6, \
+        "every arrival terminates: served or typed-shed, never lost"
+    assert sched.rejected == sched.shed
+
+
+# ---------------------------------------------------------------------------
+# model-backed: chaos matrix, preemption parity, watchdog
+# ---------------------------------------------------------------------------
+
+
+def _stack(cfg, *, n_logical=48, hbm=16, page=4):
+    pools = SharedPagedPools.create(n_logical, hbm, page_size=page,
+                                    kv_heads=cfg.num_kv_heads,
+                                    head_dim=cfg.head_dim)
+    mgr = TieringManager(n_logical, TierConfig(page_size=page,
+                                               hbm_pages=hbm,
+                                               period_steps=2))
+    tuner = OnlineTuner(n_logical, default_period=2, profile_steps=8,
+                        trial_steps=4)
+    return TrafficMonitor(pools, mgr, tuner)
+
+
+def _submissions(cfg, *, sacrificial=False):
+    """(arrival_step, Request-kwargs) pairs; ``ttl_steps`` entries are
+    honored by the faulted run and stripped by the baseline."""
+    import jax
+
+    rng = np.random.default_rng(0)
+    plens = (6, 9, 5, 8)
+    steps = (12, 10, 14, 12)
+    subs = [(0,
+             dict(rid=i, max_new_tokens=steps[i],
+                  prompt=rng.integers(0, cfg.vocab_size,
+                                      size=plens[i]).astype(np.int32),
+                  temperature=0.0 if i % 2 == 0 else 0.7,
+                  key=jax.random.PRNGKey(10 + i)))
+            for i in range(4)]
+    if sacrificial:
+        # rid 100 arrives inside the admit-flood window with a 1-step
+        # TTL: floods past the queue bound, then expires while queued.
+        # rids 101/102 arrive after the flood window with the queue
+        # already over its bound: shed at submit.
+        for rid, at, ttl in ((100, 0, 1), (101, 4, None), (102, 4, None)):
+            subs.append((at, dict(
+                rid=rid, max_new_tokens=4, ttl_steps=ttl,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=5).astype(np.int32),
+                temperature=0.0, key=jax.random.PRNGKey(10 + rid))))
+    return subs
+
+
+def _drive(params, cfg, subs, *, plan=None, max_queue=None,
+           watchdog_s=None, max_worker_restarts=3, baseline=False,
+           max_steps=200):
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    mon = _stack(cfg)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32,
+                          page_size=4, monitor=mon, pipeline=True,
+                          fault_plan=plan, max_queue=max_queue,
+                          watchdog_s=watchdog_s,
+                          max_worker_restarts=max_worker_restarts)
+    last = max(at for at, _ in subs)
+    try:
+        for t in range(max_steps):
+            for at, kw in subs:
+                if at == t:
+                    if baseline:
+                        kw = {k: v for k, v in kw.items()
+                              if k != "ttl_steps"}
+                    b.submit(Request(**kw))
+            b.step()
+            if t >= last and b.idle:
+                break
+        assert b.idle, "no-hang: the batcher must drain under chaos"
+        assert mon.pools.free_pages == mon.pools.n_logical, \
+            "every page must come back to the pool"
+    finally:
+        b.close()
+    return b, mon
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Model params + the fault-free baseline token streams (one run
+    serving every submission, sacrificial rids included)."""
+    import jax
+    import repro.configs as C
+    from repro.models import model as mdl
+
+    cfg = C.reduced("gemma3-12b")
+    params, _ = mdl.init(jax.random.PRNGKey(0), cfg)
+    b, _ = _drive(params, cfg, _submissions(cfg, sacrificial=True),
+                  baseline=True)
+    baseline = {r.rid: list(r.tokens) for r in b.completed}
+    assert len(baseline) == 7 and all(baseline.values())
+    return params, cfg, baseline
+
+
+def _chaos_plan():
+    return FaultPlan([
+        FaultPoint("pool.squeeze", start=4, stop=8, value=8),
+        FaultPoint("pool.migrate_fail", start=2, stop=20, prob=0.4),
+        FaultPoint("pool.migrate_slow", start=2, stop=20, prob=0.3,
+                   value=0.002),
+        FaultPoint("worker.delay", start=3, stop=6, prob=1.0, value=0.08),
+        FaultPoint("worker.crash", start=8, stop=10, prob=1.0),
+        FaultPoint("mass.nonfinite", start=2, stop=30, prob=0.5),
+        FaultPoint("admit.flood", start=0, stop=2, prob=1.0),
+    ], seed=7)
+
+
+def test_chaos_matrix_no_hang_typed_statuses_token_parity(served):
+    """The acceptance bar: a seeded plan firing EVERY injection point --
+    capacity squeeze, failing + slow migrations, a hung then crashing
+    decision worker (restarts exhausted into degraded-permanent sync
+    mode), corrupted mass telemetry, an admission flood -- and the run
+    still drains in bounded steps, every submitted request terminates
+    with a typed status, and every completed stream is bit-identical to
+    the fault-free run."""
+    params, cfg, baseline = served
+    rec = _obs.install(_obs.Recorder(enabled=True))
+    try:
+        b, _ = _drive(params, cfg, _submissions(cfg, sacrificial=True),
+                      plan=_chaos_plan(), max_queue=1, watchdog_s=0.02,
+                      max_worker_restarts=3)
+    finally:
+        _obs.install(_obs.Recorder())
+
+    assert set(b.fault_plan.fired) == set(FAULT_KINDS), \
+        f"chaos coverage: every injection point must fire " \
+        f"(fired: {b.fault_plan.fired})"
+
+    # every submission terminated, with a typed status
+    statuses = {r.rid: r.status for r in b.completed}
+    assert set(statuses) == {0, 1, 2, 3, 100, 101, 102}
+    assert set(statuses.values()) <= {"completed", "shed", "expired"}
+    assert all(statuses[i] == "completed" for i in range(4)), \
+        "admitted requests always run to completion"
+    assert b.shed >= 1 and b.expired >= 1, \
+        "overload must exercise both shed-at-submit and queue expiry"
+    for r in b.completed:
+        if r.status == "completed":
+            assert list(r.tokens) == baseline[r.rid], \
+                f"request {r.rid} diverged under chaos"
+        else:
+            assert not r.tokens
+
+    # the watchdog saw both failure modes and exhausted its restarts
+    reasons = [e["reason"] for e in rec.events("serve.worker_restart")]
+    assert {"hang", "crash"} <= set(reasons), reasons
+    assert b._worker_restarts > b.max_worker_restarts
+    assert b._worker_degraded, \
+        "restart exhaustion must park the loop in degraded sync mode"
+    assert rec.summary()["counters"]["serve.worker_restarts"] == \
+        b._worker_restarts
+
+
+def test_preempt_then_reactivate_is_bit_identical(served):
+    """A mid-flight HBM capacity squeeze preempts the coldest active
+    request (pure slot drop -- the write-through host copy IS the
+    state), freezes it, thaws it when pressure lifts, and the thawed
+    request resumes WITHOUT re-prefill, emitting the exact token stream
+    of the fault-free run."""
+    params, cfg, baseline = served
+    plan = FaultPlan([FaultPoint("pool.squeeze", start=4, stop=10,
+                                 value=8)], seed=0)
+    rec = _obs.install(_obs.Recorder(enabled=True))
+    try:
+        b, _ = _drive(params, cfg, _submissions(cfg), plan=plan)
+    finally:
+        _obs.install(_obs.Recorder())
+    assert b.preemptions >= 1, "the squeeze must force a preemption"
+    counters = rec.summary()["counters"]
+    assert counters["serve.preempted"] == b.preemptions
+    assert counters["serve.thawed"] == b.preemptions, \
+        "every frozen request must reactivate"
+    assert counters["serve.admitted"] == 4, \
+        "reactivation is a thaw, never a second admission/prefill"
+    for ev in rec.events("serve.preempt"):
+        assert ev["hbm_cap"] == 8
+    got = {r.rid: list(r.tokens) for r in b.completed}
+    assert got == {i: baseline[i] for i in range(4)}, \
+        "preempted-then-reactivated streams must be bit-identical"
+
+
+def test_worker_crash_without_watchdog_fails_loud_and_closes_clean(served):
+    """Satellite regression: with no watchdog configured the injected
+    decision-worker crash surfaces as the worker's exception on the
+    dispatch thread (fail-loud, not fail-silent), and ``close()`` still
+    shuts the batcher down cleanly mid-macro."""
+    from repro.serve.sched import ContinuousBatcher, Request
+
+    params, cfg, _ = served
+    plan = FaultPlan([FaultPoint("worker.crash", start=1)])
+    mon = _stack(cfg)
+    b = ContinuousBatcher(params, cfg, max_active=2, max_len=32,
+                          page_size=4, monitor=mon, pipeline=True,
+                          fault_plan=plan)
+    rng = np.random.default_rng(2)
+    b.submit(Request(rid=0, max_new_tokens=12,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=6).astype(np.int32)))
+    with pytest.raises(RuntimeError, match="injected decision-worker"):
+        for _ in range(50):
+            b.step()
+    b.close()                  # mid-macro close after the error: clean
+    assert b._decision_worker is None or not b._decision_worker.alive
